@@ -1,0 +1,48 @@
+"""Paper Fig. 5: serial flop rates of the algorithm ladder.
+
+CPU-host mapping of the paper's variants (XLA replaces hand-written AVX):
+
+  rs_unoptimized -> Algorithm 1.2 (fori_loop)
+  rs_wavefront   -> Algorithm 1.3
+  rs_fused       -> blocked with k_b = 2 (the 2x2-fusing reuse level)
+  rs_kernel      -> blocked with tuned (n_b, k_b) (our wavefront kernel)
+  rs_gemm        -> accumulated tile factors + GEMM sweeps (MXU path)
+
+k = 180 (paper's setting), m = n swept.  The paper's finding — kernel >
+fused > blocked > unoptimized, gemm wins at scale — is reproduced on the
+XLA-CPU host; on the TPU target the gemm/MXU path is the headline (see
+EXPERIMENTS.md SSPerf).
+"""
+from functools import partial
+
+from repro.core.accumulate import rot_sequence_accumulated
+from repro.core.blocked import rot_sequence_blocked
+from repro.core.ref import rot_sequence_unoptimized, rot_sequence_wavefront
+
+from benchmarks.common import emit, flops_of, problem, time_fn
+
+VARIANTS = [
+    ("rs_unoptimized", rot_sequence_unoptimized, (240, 480)),
+    ("rs_wavefront", rot_sequence_wavefront, (240, 480)),
+    ("rs_fused", partial(rot_sequence_blocked, n_b=64, k_b=2),
+     (240, 480, 960)),
+    ("rs_kernel", partial(rot_sequence_blocked, n_b=64, k_b=16),
+     (240, 480, 960)),
+    ("rs_gemm", partial(rot_sequence_accumulated, n_b=96, k_b=96),
+     (240, 480, 960, 1920)),
+]
+
+K = 180
+
+
+def run():
+    for name, fn, sizes in VARIANTS:
+        for n in sizes:
+            A, seq = problem(n, n, K)
+            dt = time_fn(fn, A, seq.cos, seq.sin)
+            gf = flops_of(n, n, K) / dt / 1e9
+            emit(f"fig5/{name}/n{n}", dt, f"{gf:.2f}_Gflops")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Fig. 6: kernel-size sweep (block shapes of the two TPU kernels).
+
+The paper sweeps register tilings (m_r, k_r); the TPU analogue sweeps the
+VMEM tile shape (n_b, k_b) of the blocked/accumulated algorithms.  The
+paper's observation that a *flatter* tile (m_r=16, k_r=2) can beat the
+memory-op-optimal one (m_r=8, k_r=5) shows up here as the n_b >> k_b
+preference of the direct method vs the square preference of the MXU path.
+"""
+from functools import partial
+
+from repro.core.accumulate import rot_sequence_accumulated
+from repro.core.blocked import rot_sequence_blocked
+
+from benchmarks.common import emit, flops_of, problem, time_fn
+
+K = 180
+N = 720
+
+
+def run():
+    A, seq = problem(N, N, K)
+    for (n_b, k_b) in [(16, 2), (32, 4), (64, 8), (64, 16), (128, 16),
+                       (32, 32), (16, 5)]:
+        fn = partial(rot_sequence_blocked, n_b=n_b, k_b=k_b)
+        dt = time_fn(fn, A, seq.cos, seq.sin)
+        gf = flops_of(N, N, K) / dt / 1e9
+        emit(f"fig6/blocked/nb{n_b}_kb{k_b}", dt, f"{gf:.2f}_Gflops")
+    for (n_b, k_b) in [(32, 32), (64, 64), (96, 96), (128, 128),
+                       (192, 64), (64, 192)]:
+        fn = partial(rot_sequence_accumulated, n_b=n_b, k_b=k_b)
+        dt = time_fn(fn, A, seq.cos, seq.sin)
+        gf = flops_of(N, N, K) / dt / 1e9
+        emit(f"fig6/accum/nb{n_b}_kb{k_b}", dt, f"{gf:.2f}_Gflops")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Paper Fig. 7: parallel speedup over row shards (paper SS7 + SS8.3).
+
+Runs the row-sharded application on 1/2/4/8 host devices in a
+subprocess (the paper parallelizes over ``i_b`` row blocks with OpenMP;
+we shard rows over the mesh).  Also reports the column-sharded pipeline
+(no CPU analogue in the paper) with its analytic communication ratio.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+_CODE = """
+import time, numpy as np, jax, jax.numpy as jnp
+from repro.core.rotations import random_sequence
+from repro.core.distributed import (rot_sequence_row_sharded,
+    rot_sequence_column_sharded_padded, column_sharded_comm_bytes)
+
+D = {D}
+mesh = jax.make_mesh((D,), ("data",))
+m, n, k = 2048, 512, 64
+rng = np.random.default_rng(0)
+A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+seq = random_sequence(jax.random.key(0), n, k)
+
+def timed(fn):
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter(); jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[1]
+
+row = timed(lambda: rot_sequence_row_sharded(
+    A, seq.cos, seq.sin, mesh, row_axes=("data",), n_b=64, k_b=16,
+    method="accumulated"))
+mesh2 = jax.make_mesh((1, D), ("data", "model"))
+col = timed(lambda: rot_sequence_column_sharded_padded(
+    A, seq.cos, seq.sin, mesh2, col_axis="model", n_b=32, k_b=16,
+    row_axes=(), method="accumulated"))
+comm = column_sharded_comm_bytes(m, n, k, D, 32, 16)
+print("RESULT %.6f %.6f %.1f" % (row, col, comm["ratio"]))
+"""
+
+
+def run():
+    base = None
+    for D in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={D}"
+        env["PYTHONPATH"] = os.path.join(
+            os.path.dirname(__file__), "..", "src")
+        r = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_CODE.format(D=D))],
+            capture_output=True, text=True, timeout=600, env=env)
+        line = [l for l in r.stdout.splitlines()
+                if l.startswith("RESULT")]
+        if not line:
+            emit(f"fig7/D{D}", 0.0, "FAILED")
+            continue
+        row_t, col_t, ratio = map(float, line[0].split()[1:])
+        if D == 1:
+            base = row_t
+        emit(f"fig7/row_sharded/D{D}", row_t,
+             f"speedup_{base/row_t:.2f}x")
+        emit(f"fig7/col_pipeline/D{D}", col_t,
+             f"comm_ratio_vs_allgather_{ratio:.0f}x")
+
+
+if __name__ == "__main__":
+    run()

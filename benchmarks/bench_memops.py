@@ -1,0 +1,49 @@
+"""Paper SS3 memory-operation model (Eqs 3.1-3.5) + TPU VMEM analogue.
+
+Analytic table: memory operations per applied rotation for each reuse
+level, and the (paper Eq 5.1-5.6 style) tile-size derivation for the TPU
+memory hierarchy (VMEM playing every cache level at once).
+"""
+from benchmarks.common import emit
+
+M_B, N_B, K_B = 4800, 216, 60  # paper's choices for context
+
+
+def memops(m_b, n_b, k_b, *, n_r=None, k_r=None, m_r=None, kind="basic"):
+    """Memory ops per rotation (paper SS3), normalized by m_b*(n_b-k_b)*k_b."""
+    rot = m_b * (n_b - k_b) * k_b
+    if kind == "basic":        # Eq 3.1
+        ops = 4 * rot + 2 * (n_b - k_b) * k_b
+    elif kind == "fused22":    # Eq 3.2
+        ops = 2 * rot + 2 * (n_b - k_b) * k_b
+    elif kind == "fused_nrkr":  # Eq 3.3
+        ops = (2 / n_r + 2 / k_r + 2 / m_b) * rot
+    elif kind == "wave_kernel":  # Eq 3.4
+        ops = (2 / k_r + 2 / n_b + 2 / m_r) * rot
+    return ops / rot
+
+
+def run():
+    emit("memops/basic", 0.0, f"{memops(M_B, N_B, K_B, kind='basic'):.3f}_ops_per_rot")
+    emit("memops/fused_2x2", 0.0,
+         f"{memops(M_B, N_B, K_B, kind='fused22'):.3f}_ops_per_rot")
+    emit("memops/fused_2x2_eq33", 0.0,
+         f"{memops(M_B, N_B, K_B, kind='fused_nrkr', n_r=2, k_r=2):.3f}_ops_per_rot")
+    # paper kernels (Eq 3.4): m_r=8,k_r=5 vs m_r=16,k_r=2
+    for m_r, k_r in [(8, 5), (16, 2), (12, 3)]:
+        v = memops(M_B, N_B, K_B, kind='wave_kernel', m_r=m_r, k_r=k_r)
+        emit(f"memops/kernel_mr{m_r}_kr{k_r}", 0.0, f"{v:.3f}_ops_per_rot")
+    # TPU adaptation: VMEM tile (m_blk rows in lanes) — the same formula
+    # with m_r -> m_blk=256 lanes, k_r -> k_b=16 waves in VMEM
+    v = memops(M_B, N_B, 16, kind='wave_kernel', m_r=256, k_r=16)
+    emit("memops/tpu_vmem_kernel_mblk256_kb16", 0.0,
+         f"{v:.3f}_hbm_ops_per_rot")
+    # MXU path: HBM ops per rotation = (2/k_b + 2/n_b + 2/m)*...*(flop
+    # overhead 4/3) with n_b=k_b=128
+    v = memops(M_B, 256, 128, kind='wave_kernel', m_r=256, k_r=128)
+    emit("memops/tpu_mxu_kernel_nb128_kb128", 0.0,
+         f"{v:.3f}_hbm_ops_per_rot")
+
+
+if __name__ == "__main__":
+    run()

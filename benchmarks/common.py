@@ -1,0 +1,40 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rotations import random_sequence
+
+__all__ = ["time_fn", "emit", "problem", "flops_of"]
+
+
+def problem(m: int, n: int, k: int, seed: int = 0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    seq = random_sequence(jax.random.key(seed), n, k, dtype=dtype)
+    return A, seq
+
+
+def flops_of(m: int, n: int, k: int) -> float:
+    return 6.0 * m * (n - 1) * k
+
+
+def time_fn(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall time (s) of a jitted call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds*1e6:.1f},{derived}")

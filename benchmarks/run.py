@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--only fig5`` restricts.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_fig5, bench_fig6, bench_fig7, bench_fig8,
+                            bench_iolb, bench_memops)
+    suites = {
+        "fig5": bench_fig5, "fig6": bench_fig6, "fig7": bench_fig7,
+        "fig8": bench_fig8, "memops": bench_memops, "iolb": bench_iolb,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

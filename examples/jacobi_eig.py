@@ -1,0 +1,36 @@
+"""Eigendecomposition via rotation sequences (the paper's use-case).
+
+Round-robin Jacobi records its pivots as a mixed rotation/reflector
+sequence; the eigenbasis is recovered by applying the *recorded
+sequence* with the optimized appliers — the "delayed sequences of
+rotations" pattern (paper SS5.1) that motivates the whole kernel.
+
+    PYTHONPATH=src python examples/jacobi_eig.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jacobi_apply_basis, jacobi_eigh
+
+n = 64
+rng = np.random.default_rng(0)
+X = rng.standard_normal((n, n)).astype(np.float32)
+H = jnp.asarray((X + X.T) / 2)
+
+res = jacobi_eigh(H, cycles=8)
+print(f"n={n}: {res.cos.shape[1]} recorded waves, "
+      f"off-diagonal norm {float(res.off_norm):.2e}")
+
+ev = np.sort(np.asarray(res.eigenvalues))
+ref = np.sort(np.linalg.eigvalsh(np.asarray(H, np.float64)))
+print(f"eigenvalue max err vs numpy: {np.abs(ev - ref).max():.2e}")
+
+# delayed application: rotate a tall matrix into the eigenbasis without
+# ever forming V — this is where the optimized appliers earn their keep
+G = jnp.asarray(rng.standard_normal((512, n)), jnp.float32)
+GV = jacobi_apply_basis(res, G, method="accumulated")
+V = jacobi_apply_basis(res, method="accumulated")
+err = float(jnp.abs(GV - G @ V).max())
+print(f"delayed-sequence application err: {err:.2e}")
+print("OK")

@@ -1,0 +1,19 @@
+"""Config registry: one module per assigned architecture."""
+from importlib import import_module
+
+from .base import SHAPES, ModelConfig, ShapeConfig, shape_skips
+
+ARCHS = (
+    "starcoder2-3b", "smollm-135m", "llama3-405b", "gemma3-4b",
+    "recurrentgemma-9b", "chameleon-34b", "deepseek-v2-lite-16b",
+    "kimi-k2-1t-a32b", "mamba2-370m", "whisper-large-v3",
+)
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = import_module(f"repro.configs.{name.replace('-', '_')}")
+    return mod.CONFIG
+
+
+__all__ = ["ARCHS", "SHAPES", "ModelConfig", "ShapeConfig", "get_config",
+           "shape_skips"]

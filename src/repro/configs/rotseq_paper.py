@@ -1,0 +1,21 @@
+"""The paper's own experimental workload (SS8): apply k = 180 waves of
+rotations to square matrices, m = n swept.  Used by the benchmark
+harness; not an LM architecture.
+"""
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class RotSeqConfig:
+    k: int = 180
+    sizes: Tuple[int, ...] = (240, 480, 960, 1920, 3840)
+    n_b: int = 64
+    k_b: int = 16
+    # TPU kernel tiling (the adaptation of the paper's m_r=16, k_r=2)
+    mxu_n_b: int = 128
+    mxu_k_b: int = 128
+    m_blk: int = 256
+
+
+CONFIG = RotSeqConfig()

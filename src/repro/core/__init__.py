@@ -1,0 +1,17 @@
+"""The paper's primary contribution: rotation-sequence application.
+
+Submodules: ``ref`` (Alg 1.2/1.3 oracles), ``blocked`` (SS2/SS5 blocking),
+``accumulate`` (rs_gemm/MXU), ``distributed`` (shard_map row/column
+sharding), ``jacobi`` (eigensolver consumer), ``api`` (dispatch).
+"""
+from .api import METHODS, apply_rotation_sequence
+from .jacobi import JacobiResult, jacobi_apply_basis, jacobi_eigh
+from .rotations import (RotationSequence, givens, identity_sequence,
+                        random_sequence, sequence_to_dense)
+
+__all__ = [
+    "METHODS", "apply_rotation_sequence",
+    "JacobiResult", "jacobi_apply_basis", "jacobi_eigh",
+    "RotationSequence", "givens", "identity_sequence", "random_sequence",
+    "sequence_to_dense",
+]

@@ -1,0 +1,50 @@
+"""Public API for rotation-sequence application.
+
+``apply_rotation_sequence(A, C, S, method=...)`` dispatches to all
+implementations; ``method`` one of:
+
+  ``unoptimized``   Algorithm 1.2 (paper baseline, jnp)
+  ``wavefront``     Algorithm 1.3 (jnp)
+  ``blocked``       blocked wavefront, host jnp (paper SS2/SS5)
+  ``accumulated``   rs_gemm analogue: tile factors + GEMM sweeps
+  ``pallas_wave``   Pallas VPU wavefront kernel (packed layout)
+  ``pallas_mxu``    Pallas MXU accumulated kernel
+"""
+from __future__ import annotations
+
+from .accumulate import rot_sequence_accumulated
+from .blocked import rot_sequence_blocked
+from .ref import rot_sequence_unoptimized, rot_sequence_wavefront
+
+__all__ = ["apply_rotation_sequence", "METHODS"]
+
+METHODS = (
+    "unoptimized", "wavefront", "blocked", "accumulated",
+    "pallas_wave", "pallas_mxu",
+)
+
+
+def apply_rotation_sequence(A, C, S, *, method: str = "accumulated",
+                            n_b: int = 64, k_b: int = 16,
+                            reflect: bool = False, G=None, **kw):
+    if method == "unoptimized":
+        assert G is None, "per-entry signs need a blocked method"
+        return rot_sequence_unoptimized(A, C, S, reflect=reflect)
+    if method == "wavefront":
+        assert G is None, "per-entry signs need a blocked method"
+        return rot_sequence_wavefront(A, C, S, reflect=reflect)
+    if method == "blocked":
+        return rot_sequence_blocked(A, C, S, n_b=n_b, k_b=k_b,
+                                    reflect=reflect, G=G)
+    if method == "accumulated":
+        return rot_sequence_accumulated(A, C, S, n_b=n_b, k_b=k_b,
+                                        reflect=reflect, G=G)
+    if method == "pallas_wave":
+        from repro.kernels.rotseq.ops import rot_sequence_wave
+        return rot_sequence_wave(A, C, S, n_b=n_b, k_b=k_b,
+                                 reflect=reflect, G=G, **kw)
+    if method == "pallas_mxu":
+        from repro.kernels.rotseq_mxu.ops import rot_sequence_mxu
+        return rot_sequence_mxu(A, C, S, n_b=n_b, k_b=k_b,
+                                reflect=reflect, G=G, **kw)
+    raise ValueError(f"unknown method {method!r}; one of {METHODS}")

@@ -1,0 +1,112 @@
+"""Reference implementations of rotation-sequence application.
+
+``rot_sequence_numpy``        — Algorithm 1.2, pure numpy, float64: the oracle.
+``rot_sequence_unoptimized``  — Algorithm 1.2 in JAX (fori_loop), jit-able.
+``rot_sequence_wavefront``    — Algorithm 1.3 (wavefront order) in JAX.
+
+All three are mathematically identical; the wavefront version re-orders the
+rotations along anti-diagonals of the ``(j, p)`` grid, which is legal because
+rotations only need to respect the partial order
+``(j, p) < (j+1, p)`` and ``(j+1, p) < (j, p+1)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rot_sequence_numpy",
+    "rot_sequence_unoptimized",
+    "rot_sequence_wavefront",
+    "reflector_sequence_numpy",
+]
+
+
+def rot_sequence_numpy(A, C, S, reflect: bool = False) -> np.ndarray:
+    """Algorithm 1.2 in numpy (float64 accumulate). The test oracle."""
+    A = np.array(A, dtype=np.float64, copy=True)
+    C = np.asarray(C, dtype=np.float64)
+    S = np.asarray(S, dtype=np.float64)
+    n = A.shape[1]
+    assert C.shape[0] == n - 1, (C.shape, A.shape)
+    for p in range(C.shape[1]):
+        for j in range(n - 1):
+            c, s = C[j, p], S[j, p]
+            x = A[:, j].copy()
+            y = A[:, j + 1].copy()
+            if reflect:
+                A[:, j] = c * x + s * y
+                A[:, j + 1] = s * x - c * y
+            else:
+                A[:, j] = c * x + s * y
+                A[:, j + 1] = -s * x + c * y
+    return A
+
+
+def reflector_sequence_numpy(A, C, S) -> np.ndarray:
+    """2x2 reflector variant (paper SS8.4): ``[[c, s], [s, -c]]`` per plane."""
+    return rot_sequence_numpy(A, C, S, reflect=True)
+
+
+def _rot_cols(A, j, c, s, g):
+    """Apply one plane transform to columns ``(j, j+1)`` of ``A``.
+
+    Unified update ``y' = g * (s*x - c*y)``: ``g = -1`` is a rotation,
+    ``g = +1`` a 2x2 reflector.
+    """
+    xy = jax.lax.dynamic_slice_in_dim(A, j, 2, axis=1)  # (m, 2)
+    x = xy[:, 0]
+    y = xy[:, 1]
+    xn = c * x + s * y
+    yn = g * (s * x - c * y)
+    return jax.lax.dynamic_update_slice_in_dim(
+        A, jnp.stack([xn, yn], axis=1), j, axis=1
+    )
+
+
+@partial(jax.jit, static_argnames=("reflect",))
+def rot_sequence_unoptimized(A, C, S, reflect: bool = False):
+    """Algorithm 1.2 with ``fori_loop`` over ``p`` (outer) and ``j`` (inner)."""
+    n = A.shape[1]
+    k = C.shape[1]
+    g = jnp.asarray(1.0 if reflect else -1.0, A.dtype)
+
+    def wave(p, A):
+        def body(j, A):
+            return _rot_cols(A, j, C[j, p].astype(A.dtype),
+                             S[j, p].astype(A.dtype), g)
+
+        return jax.lax.fori_loop(0, n - 1, body, A)
+
+    return jax.lax.fori_loop(0, k, wave, A)
+
+
+@partial(jax.jit, static_argnames=("reflect",))
+def rot_sequence_wavefront(A, C, S, reflect: bool = False):
+    """Algorithm 1.3: anti-diagonal (wavefront) order.
+
+    Diagonal ``d`` applies rotations ``(j, p)`` with ``j + p = d`` in order of
+    ascending ``p``.  Out-of-range entries are skipped via identity rotations
+    (c=1, s=0), the same trick the blocked algorithms use for the startup and
+    shutdown triangles.
+    """
+    n = A.shape[1]
+    k = C.shape[1]
+
+    def diag(d, A):
+        def body(p, A):
+            j = d - p
+            valid = (j >= 0) & (j <= n - 2)
+            jc = jnp.clip(j, 0, n - 2)
+            c = jnp.where(valid, C[jc, p], 1.0).astype(A.dtype)
+            s = jnp.where(valid, S[jc, p], 0.0).astype(A.dtype)
+            # padding must stay a no-op => rotation sign (-1) when invalid
+            g = jnp.where(valid & reflect, 1.0, -1.0).astype(A.dtype)
+            return _rot_cols(A, jc, c, s, g)
+
+        return jax.lax.fori_loop(0, k, body, A)
+
+    return jax.lax.fori_loop(0, (n - 2) + (k - 1) + 1, diag, A)

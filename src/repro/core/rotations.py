@@ -1,0 +1,104 @@
+"""Plane (Givens) rotation sequences: representation and generation.
+
+A rotation sequence is stored the way the paper stores it (Alg 1.2): two
+matrices ``C`` and ``S`` of shape ``(n-1, k)``.  Rotation ``(j, p)`` acts on
+columns ``j`` and ``j+1`` of the target matrix ``A`` (applied from the
+right)::
+
+    t        = c * A[:, j] + s * A[:, j+1]
+    A[:,j+1] = -s * A[:, j] + c * A[:, j+1]
+    A[:, j]  = t
+
+i.e. ``A <- A @ G(j, p)`` with ``G = [[c, -s], [s, c]]`` embedded at
+``(j, j)``.  The application order is wave-major: all rotations of wave
+``p`` (ascending ``j``) before wave ``p+1``.
+
+Identity padding: a rotation with ``c = 1, s = 0`` is a no-op.  All blocked
+algorithms in this package pad the ``(j, p)`` grid with identity rotations
+instead of special-casing the startup/shutdown triangles of the wavefront
+(the TPU-idiomatic equivalent of the paper's ``k_r = 1`` edge kernels).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "RotationSequence",
+    "random_sequence",
+    "givens",
+    "identity_sequence",
+    "sequence_to_dense",
+]
+
+
+class RotationSequence(NamedTuple):
+    """A sequence of ``(n-1) * k`` plane rotations in the paper's layout."""
+
+    cos: jax.Array  # (n-1, k)
+    sin: jax.Array  # (n-1, k)
+
+    @property
+    def n(self) -> int:
+        return self.cos.shape[0] + 1
+
+    @property
+    def k(self) -> int:
+        return self.cos.shape[1]
+
+    @property
+    def dtype(self):
+        return self.cos.dtype
+
+
+def givens(a, b):
+    """Compute ``(c, s)`` zeroing ``b`` against ``a``: ``[c s; -s c]ᵀ [a; b] = [r; 0]``.
+
+    Safe at ``a = b = 0`` (returns identity rotation).
+    """
+    r = jnp.hypot(a, b)
+    safe = r > 0
+    c = jnp.where(safe, a / jnp.where(safe, r, 1.0), 1.0)
+    s = jnp.where(safe, b / jnp.where(safe, r, 1.0), 0.0)
+    return c, s
+
+
+def random_sequence(key, n: int, k: int, dtype=jnp.float32) -> RotationSequence:
+    """Random rotation sequence: uniform angles in ``[0, 2pi)``."""
+    theta = jax.random.uniform(key, (n - 1, k), minval=0.0, maxval=2.0 * np.pi)
+    return RotationSequence(
+        jnp.cos(theta).astype(dtype), jnp.sin(theta).astype(dtype)
+    )
+
+
+def identity_sequence(n: int, k: int, dtype=jnp.float32) -> RotationSequence:
+    return RotationSequence(
+        jnp.ones((n - 1, k), dtype), jnp.zeros((n - 1, k), dtype)
+    )
+
+
+def sequence_to_dense(seq: RotationSequence, reflect: bool = False) -> np.ndarray:
+    """Accumulate the whole sequence into a dense ``n x n`` orthogonal matrix.
+
+    ``A @ Q`` equals applying the sequence to ``A``.  Pure numpy; used by
+    tests and by small-scale accumulation oracles.
+    """
+    cos = np.asarray(seq.cos, dtype=np.float64)
+    sin = np.asarray(seq.sin, dtype=np.float64)
+    n = cos.shape[0] + 1
+    q = np.eye(n)
+    for p in range(cos.shape[1]):
+        for j in range(n - 1):
+            c, s = cos[j, p], sin[j, p]
+            x = q[:, j].copy()
+            y = q[:, j + 1].copy()
+            if reflect:
+                q[:, j] = c * x + s * y
+                q[:, j + 1] = s * x - c * y
+            else:
+                q[:, j] = c * x + s * y
+                q[:, j + 1] = -s * x + c * y
+    return q

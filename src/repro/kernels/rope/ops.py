@@ -1,0 +1,37 @@
+"""Jit'd wrapper for the fused RoPE kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rope_pallas
+from .ref import apply_rope_ref, rope_tables
+
+__all__ = ["apply_rope", "rope_tables", "apply_rope_ref"]
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def apply_rope(q, k, cos, sin, *, use_kernel: bool = False,
+               interpret: bool = True):
+    """Rotate q (B, S, Hq, D) and k (B, S, Hk, D) by tables (S, D/2).
+
+    ``use_kernel=False`` (default on CPU) routes through the jnp reference;
+    ``use_kernel=True`` uses the fused Pallas kernel.
+    """
+    if not use_kernel:
+        return apply_rope_ref(q, cos, sin), apply_rope_ref(k, cos, sin)
+
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+
+    def one(qb, kb):
+        qo, ko = rope_pallas(
+            qb.reshape(S, Hq * D), kb.reshape(S, Hk * D), cos, sin,
+            heads_q=Hq, heads_k=Hk, head_dim=D,
+            blk=min(256, S), interpret=interpret,
+        )
+        return qo.reshape(S, Hq, D), ko.reshape(S, Hk, D)
+
+    return jax.vmap(one)(q, k)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for rotary position embeddings (RoPE).
+
+RoPE is the degenerate planar-rotation sequence: one wave (``k = 1``) of
+*disjoint* rotations — dimension pairs ``(i, i + d/2)`` of each head vector
+rotate by ``pos * theta_i`` (half-split / "rotate_half" convention).
+Because the planes are disjoint the wave vectorizes; the connection to the
+paper's machinery is the representation, and the fused Pallas kernel
+applies the same VMEM-residency argument (rotate q and k in one pass, no
+HBM round-trip for the intermediates).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_tables", "apply_rope_ref"]
+
+
+def rope_tables(positions, head_dim: int, base: float = 10000.0,
+                dtype=jnp.float32):
+    """cos/sin tables ``(len(positions), head_dim // 2)``."""
+    half = head_dim // 2
+    inv_freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope_ref(x, cos, sin):
+    """Rotate ``x`` (..., seq, heads, head_dim) by per-position tables.
+
+    ``cos``/``sin``: (seq, head_dim // 2).
+    """
+    half = x.shape[-1] // 2
+    x1 = x[..., :half]
+    x2 = x[..., half:]
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)

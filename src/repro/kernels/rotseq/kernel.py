@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: wavefront application of rotation sequences (VPU path).
+
+Faithful TPU adaptation of the paper's register-reuse kernel (SS3).  The
+paper pins ``m_r`` rows x ``k_r + 1`` columns of ``A`` in AVX registers and
+streams waves of rotations through them; here a ``(k_b + n_b, m_blk)`` block
+of the *packed* (transposed) matrix is pinned in VMEM and ``k_b`` waves of
+rotations stream through it.  The ``k_b`` trailing columns carry over to the
+next grid step in a VMEM scratch buffer — they never round-trip to HBM,
+which is exactly the paper's fused-rotation reuse argument one level up the
+memory hierarchy.
+
+Layout ("packing", paper SS4): the kernel operates on ``AT`` of shape
+``(n_cols, m)`` so that matrix *columns* are rows of vregs — the row
+dimension ``m`` lies along TPU lanes and every rotation is a dense
+``(1, m_blk)`` x scalar VPU op.  The caller transposes once (the packing
+cost; negligible for ``k >> 1``) or keeps the operand packed across calls
+(paper's ``rs_kernel_v2``).
+
+Grid: ``(num_row_blocks, T)`` with the tile dimension ``T`` innermost and
+sequential ("arbitrary" semantics): the carry scratch persists across ``t``
+and is re-initialized at ``t == 0``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rotseq_wave_pallas"]
+
+
+def _wave_kernel(ct_ref, st_ref, gt_ref, init_ref, fresh_ref, out_ref,
+                 carry_ref, *, n_b: int, k_b: int):
+    """One parallelogram tile: k_b waves over X = [carry; fresh] (w, m_blk)."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[...] = init_ref[...]
+
+    x = jnp.concatenate([carry_ref[...], fresh_ref[...]], axis=0)
+
+    def wave(p, x):
+        def rot(jj, x):
+            jl = k_b - 1 - p + jj
+            c = ct_ref[0, jj, p].astype(x.dtype)
+            s = st_ref[0, jj, p].astype(x.dtype)
+            g = gt_ref[0, jj, p].astype(x.dtype)
+            pair = jax.lax.dynamic_slice_in_dim(x, jl, 2, axis=0)
+            xv, yv = pair[0], pair[1]
+            xn = c * xv + s * yv
+            yn = g * (s * xv - c * yv)
+            return jax.lax.dynamic_update_slice_in_dim(
+                x, jnp.stack([xn, yn], axis=0), jl, axis=0
+            )
+
+        return jax.lax.fori_loop(0, n_b, rot, x)
+
+    x = jax.lax.fori_loop(0, k_b, wave, x)
+    out_ref[...] = x[:n_b]
+    carry_ref[...] = x[n_b:]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_b", "k_b", "m_blk", "interpret"),
+)
+def rotseq_wave_pallas(ATfresh, Ct, St, Gt, init, *, n_b: int, k_b: int,
+                       m_blk: int, interpret: bool = True):
+    """Apply one band of ``k_b`` waves to the packed operand.
+
+    Args:
+      ATfresh: ``(T * n_b, m)`` — fresh column stream, packed layout
+        (``ATfresh[i] = A[:, i + 1]`` zero-padded; see ``core.blocked``).
+      Ct, St, Gt: ``(T, n_b, k_b)`` sheared rotation tiles (no-op padded;
+        ``Gt`` is the rotation/reflector sign, see ``pack_sheared``).
+      init: ``(k_b, m)`` initial carry (``[0...0, A[:, 0]]``).
+      n_b, k_b: tile diagonals / band waves (k_b = paper's ``k_b``,
+        n_b plays the role of the paper's L1 block ``n_b``).
+      m_blk: rows of ``A`` per grid step (lane dimension; multiple of 128
+        on hardware).
+
+    Returns:
+      ``(T * n_b, m)`` output stream ``O`` with
+      ``O[i] = A_final[:, i - (k_b - 1)]``.
+    """
+    U, m = ATfresh.shape
+    T = U // n_b
+    assert U == T * n_b, (U, n_b)
+    assert m % m_blk == 0, (m, m_blk)
+    R = m // m_blk
+    grid = (R, T)
+
+    kernel = functools.partial(_wave_kernel, n_b=n_b, k_b=k_b)
+    cs_spec = pl.BlockSpec((1, n_b, k_b), lambda i, t: (t, 0, 0),
+                           memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            cs_spec,
+            cs_spec,
+            cs_spec,
+            pl.BlockSpec((k_b, m_blk), lambda i, t: (0, i)),
+            pl.BlockSpec((n_b, m_blk), lambda i, t: (t, i)),
+        ],
+        out_specs=pl.BlockSpec((n_b, m_blk), lambda i, t: (t, i)),
+        out_shape=jax.ShapeDtypeStruct((T * n_b, m), ATfresh.dtype),
+        scratch_shapes=[pltpu.VMEM((k_b, m_blk), ATfresh.dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(Ct, St, Gt, init, ATfresh)

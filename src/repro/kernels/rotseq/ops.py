@@ -1,0 +1,62 @@
+"""Jit'd wrapper for the wavefront rotation-sequence Pallas kernel.
+
+Handles the packing (transpose to column-major-of-rows layout, paper SS4),
+identity padding, band loop over ``k_b`` waves, and unpacking.  Public entry:
+:func:`rot_sequence_wave`.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocked import num_tiles, pack_sheared
+
+from .kernel import rotseq_wave_pallas
+
+__all__ = ["rot_sequence_wave"]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_b", "k_b", "m_blk", "reflect", "interpret"),
+)
+def rot_sequence_wave(A, C, S, *, n_b: int = 64, k_b: int = 16,
+                      m_blk: int = 256, reflect: bool = False, G=None,
+                      interpret: bool = True):
+    """Apply the rotation sequence ``(C, S)`` to ``A`` from the right.
+
+    Drop-in equivalent of ``repro.core.ref.rot_sequence_numpy`` computed by
+    the Pallas wavefront kernel.  ``m_blk`` is clamped/padded so any ``m``
+    works; on hardware use multiples of 128.
+    """
+    m, n = A.shape
+    J, k = C.shape
+    assert J == n - 1, (C.shape, A.shape)
+    n_b = min(n_b, max(8, n))
+    T = num_tiles(n, n_b, k_b)
+
+    m_pad = _round_up(m, m_blk)
+    AT = jnp.pad(A.T, ((0, 0), (0, m_pad - m)))  # packed layout (n, m_pad)
+
+    for p0 in range(0, k, k_b):
+        Ct, St, Gt = pack_sheared(C, S, p0, k_b, n_b, T, reflect=reflect,
+                                  G=G)
+        init = jnp.concatenate(
+            [jnp.zeros((k_b - 1, m_pad), AT.dtype), AT[:1]], axis=0
+        )
+        fresh = jnp.pad(AT[1:], ((0, T * n_b - (n - 1)), (0, 0)))
+        O = rotseq_wave_pallas(
+            fresh, Ct, St, Gt, init,
+            n_b=n_b, k_b=k_b, m_blk=min(m_blk, m_pad),
+            interpret=interpret,
+        )
+        AT = jax.lax.slice_in_dim(O, k_b - 1, k_b - 1 + n, axis=0)
+
+    return AT[:, :m].T  # unpack

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the rotation-sequence Pallas kernels.
+
+The oracle is the (already numpy-validated) blocked host algorithm from
+``repro.core``; tests additionally cross-check against the pure-numpy
+Algorithm 1.2 oracle in ``repro.core.ref``.
+"""
+from __future__ import annotations
+
+from repro.core.blocked import rot_sequence_blocked
+
+
+def rot_sequence_ref(A, C, S, *, n_b: int = 64, k_b: int = 16,
+                     reflect: bool = False):
+    return rot_sequence_blocked(A, C, S, n_b=n_b, k_b=k_b, reflect=reflect)

@@ -1,0 +1,52 @@
+"""Jit'd wrapper for the MXU rotation-sequence kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accumulate import accumulate_tile_factors
+from repro.core.blocked import num_tiles, pack_sheared
+
+from .kernel import rotseq_mxu_pallas
+
+__all__ = ["rot_sequence_mxu"]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_b", "k_b", "m_blk", "reflect", "interpret"),
+)
+def rot_sequence_mxu(A, C, S, *, n_b: int = 128, k_b: int = 128,
+                     m_blk: int = 256, reflect: bool = False, G=None,
+                     interpret: bool = True):
+    """Apply ``(C, S)`` to ``A`` from the right via accumulated MXU tiles."""
+    m, n = A.shape
+    J, k = C.shape
+    assert J == n - 1
+    n_b = min(n_b, max(8, n))
+    T = num_tiles(n, n_b, k_b)
+
+    m_pad = _round_up(m, m_blk)
+    Ap = jnp.pad(A, ((0, m_pad - m), (0, 0)))
+
+    for p0 in range(0, k, k_b):
+        Ct, St, Gt = pack_sheared(C, S, p0, k_b, n_b, T, reflect=reflect,
+                                  G=G)
+        Q = accumulate_tile_factors(Ct, St, Gt, dtype=Ap.dtype)
+        init = jnp.concatenate(
+            [jnp.zeros((m_pad, k_b - 1), Ap.dtype), Ap[:, :1]], axis=1
+        )
+        fresh = jnp.pad(Ap[:, 1:], ((0, 0), (0, T * n_b - (n - 1))))
+        O = rotseq_mxu_pallas(
+            fresh, Q, init, n_b=n_b, k_b=k_b,
+            m_blk=min(m_blk, m_pad), interpret=interpret,
+        )
+        Ap = jax.lax.slice_in_dim(O, k_b - 1, k_b - 1 + n, axis=1)
+
+    return Ap[:m]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the MXU rotation-sequence kernel."""
+from __future__ import annotations
+
+from repro.core.accumulate import rot_sequence_accumulated
+
+
+def rot_sequence_mxu_ref(A, C, S, *, n_b: int = 128, k_b: int = 128,
+                         reflect: bool = False):
+    return rot_sequence_accumulated(A, C, S, n_b=n_b, k_b=k_b,
+                                    reflect=reflect)

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks device
+count at first init): the dry-run — and only the dry-run — sees 512
+placeholder CPU devices so ``jax.make_mesh`` can build the production
+(16, 16) single-pod and (2, 16, 16) multi-pod meshes.
+
+For every cell this script:
+  1. builds the model + step function (train_step for training shapes,
+     ``forward`` for prefill, ``decode_step`` for decode),
+  2. jits with explicit in/out shardings (FSDP + TP + EP rules),
+  3. ``.lower(...).compile()`` over ShapeDtypeStructs (no allocation),
+  4. records ``memory_analysis()`` (fits-in-HBM proof),
+     ``cost_analysis()`` (per-device FLOPs/bytes) and the collective
+     bytes parsed from the post-SPMD HLO,
+  5. writes ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` (cached:
+     re-runs skip completed cells).
+
+Usage::
+
+  python -m repro.launch.dryrun                       # full sweep
+  python -m repro.launch.dryrun --arch smollm-135m    # one arch
+  python -m repro.launch.dryrun --arch X --shape train_4k --mesh multi
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_skips
+from repro.launch.mesh import make_production_mesh, make_rules_for_mesh
+from repro.launch.specs import (abstract_cache, abstract_opt_state,
+                                abstract_params, input_specs,
+                                sharding_trees)
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.parallel.sharding import axis_rules
+from repro.train import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|"
+                       r"u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1, "c64": 8, "c128": 16}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES.get(dt.split("{")[0], 4)
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op, by kind (per device)."""
+    out = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        for kind in _COLL_KINDS:
+            # match "= <shape> kind(" and fused variants "kind-start("
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                lhs = line.split("=", 1)[1]
+                op = lhs.find(kind)
+                out[kind] += _shape_bytes(lhs[:op])
+                counts[kind] += 1
+                break
+    return out, counts
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             force: bool = False, seq_parallel=None):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    path = os.path.join(OUT_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[skip cached] {tag}")
+        return json.load(open(path))
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = shape_skips(cfg, shape)
+    if skip:
+        rec = {"cell": tag, "status": "skipped", "reason": skip}
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[skip] {tag}: {skip}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    # sequence/context parallelism is on by default: it is required for
+    # activations (train) and KV caches (decode) to fit 16 GiB/chip at
+    # the production mesh; the hillclimb ablates it per-cell
+    sp = True if seq_parallel is None else seq_parallel
+    rules = make_rules_for_mesh(mesh, seq_parallel=sp)
+    model = build_model(cfg)
+    optimizer = AdamW(lr=1e-4, quantized=cfg.dryrun_q8)
+
+    t0 = time.time()
+    with axis_rules(rules, mesh=mesh):
+        trees = sharding_trees(model, cfg, shape, optimizer, rules, mesh)
+        batch_abs = input_specs(cfg, shape)
+        # training holds fp32 master params (unless the arch's policy says
+        # bf16, e.g. kimi-k2); serving always deploys bf16 weights
+        pdtype = (jnp.dtype(cfg.param_dtype) if shape.kind == "train"
+                  else jnp.dtype(jnp.bfloat16))
+        params_abs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, pdtype)
+            if x.dtype == jnp.float32 else x, trees["params_abs"])
+
+        if shape.kind == "train":
+            step = make_train_step(model, cfg, optimizer,
+                                   grad_accum=cfg.dryrun_grad_accum,
+                                   grad_shardings=trees["params"])
+            opt_abs = abstract_opt_state(optimizer, params_abs)
+            jf = jax.jit(
+                step,
+                in_shardings=(trees["params"], trees["opt"],
+                              trees["batch"]),
+                out_shardings=(trees["params"], trees["opt"], None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jf.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            if cfg.is_encdec:
+                def fwd(p, b):
+                    return model.forward(p, b["frames"], b["dec_tokens"])
+            else:
+                def fwd(p, b):
+                    return model.forward(p, b["tokens"])
+            jf = jax.jit(fwd, in_shardings=(trees["params"],
+                                            trees["batch"]))
+            lowered = jf.lower(params_abs, batch_abs)
+        else:  # decode
+            def dec(p, c, b):
+                return model.decode_step(p, c, b["tokens"])
+            jf = jax.jit(
+                dec,
+                in_shardings=(trees["params"], trees["cache"],
+                              trees["batch"]),
+                out_shardings=(None, trees["cache"]),
+                donate_argnums=(1,),
+            )
+            lowered = jf.lower(params_abs, trees["cache_abs"], batch_abs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll, coll_counts = collective_bytes(hlo)
+    # while-loop-aware analysis (XLA's cost_analysis counts scan bodies
+    # once; see hlo_analysis.py) — this is what the roofline uses
+    from repro.launch.hlo_analysis import analyze_hlo
+    hc = analyze_hlo(hlo)
+
+    rec = {
+        "cell": tag,
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "chips": int(mesh.devices.size),
+        "kind": shape.kind,
+        "seq_parallel": sp,
+        "grad_accum": cfg.dryrun_grad_accum if shape.kind == "train" else 1,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # per-device numbers (verified semantics; see EXPERIMENTS.md)
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_device": cost.get("flops", -1),
+            "transcendentals": cost.get("transcendentals", -1),
+            "bytes_accessed_per_device": cost.get("bytes accessed", -1),
+        },
+        # loop-corrected per-device totals (roofline source of truth)
+        "hlo_cost": {
+            "flops_per_device": hc.flops,
+            "dot_flops_per_device": hc.dot_flops,
+            "bytes_per_device": hc.bytes,
+            "bytes_lo_per_device": hc.bytes_lo,
+            "transcendentals": hc.transcendentals,
+            "collective_bytes_per_device": dict(hc.collective_bytes),
+            "collective_counts": dict(hc.collective_counts),
+        },
+        "collective_bytes_per_device": coll,
+        "collective_counts": coll_counts,
+    }
+    json.dump(rec, open(path, "w"), indent=1)
+    peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    print(f"[ok] {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s "
+          f"mem/device ~{peak/2**30:.2f} GiB "
+          f"flops/device {rec['cost']['flops_per_device']:.3e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single",
+                                                     "multi"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                try:
+                    run_cell(arch, shape, mesh_kind, force=args.force)
+                except Exception:
+                    failures.append(f"{arch}__{shape}__{mesh_kind}")
+                    print(f"[FAIL] {arch}__{shape}__{mesh_kind}")
+                    traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run sweep complete")
+
+
+if __name__ == "__main__":
+    main()

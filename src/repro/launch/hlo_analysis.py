@@ -1,0 +1,330 @@
+"""Post-SPMD HLO cost analyzer with correct while-loop accounting.
+
+XLA's built-in ``compiled.cost_analysis()`` counts every ``while`` body
+**once**, regardless of trip count (verified empirically — see
+EXPERIMENTS.md SSDry-run).  Scanned-layer models are therefore
+undercounted by ~n_layers.  This module parses the compiled HLO text,
+recovers each loop's trip count from its condition computation, and
+accumulates
+
+  * ``flops``   — exact for dot/convolution (contraction dims resolved
+                  from operand shapes), 1 flop/element for fusions,
+  * ``bytes``   — HBM-traffic estimate: sum of operand + result bytes of
+                  memory-touching top-level instructions (fusions, dots,
+                  copies, slices, collectives, sorts, ...),
+  * ``collectives`` — result bytes + op counts per collective kind,
+
+multiplying while bodies by their trip counts (nested loops compose
+multiplicatively: grad-accumulation x layer scan x flash-chunk scan).
+
+Validated in tests against unrolled-vs-scanned programs where XLA's own
+numbers are exact.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(.*)$")
+# header params may contain nested parens (tuple types): just grab the name
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*\(")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+}
+
+# top-level opcodes whose operands+results approximate HBM traffic
+_MEM_OPS_PREFIX = (
+    "fusion", "dot", "convolution", "copy", "dynamic-slice",
+    "dynamic-update-slice", "sort", "gather", "scatter", "reduce",
+    "broadcast", "transpose", "reshape", "concatenate", "slice", "pad",
+    "select-and-scatter", "rng", "cholesky", "triangular-solve",
+) + _COLL_KINDS + tuple(k + "-start" for k in _COLL_KINDS) + (
+    "all-gather-start", "all-reduce-start", "collective-permute-start",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    operands: List[str]
+    attrs: str
+    raw: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    dot_flops: float = 0.0      # MXU work (dot/convolution only)
+    bytes: float = 0.0          # HBM upper bound: operands + results
+    bytes_lo: float = 0.0       # HBM lower bound: results only
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.dot_flops += other.dot_flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_lo += other.bytes_lo * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += v * mult
+
+
+_OPCODE_RE = re.compile(r"^([a-z][a-z0-9-]*)\(")
+
+
+def _parse_rhs(rhs: str) -> Tuple[str, str, List[str], str]:
+    """rhs = '<type> opcode(%a, %b, ...), attrs' -> parts."""
+    # type prefix ends right before ' opcode('
+    m = re.search(r"\s([a-z][a-z0-9-]*)\(", rhs)
+    if not m:
+        return rhs, "unknown", [], ""
+    type_str = rhs[: m.start()]
+    opcode = m.group(1)
+    rest = rhs[m.end():]
+    # operands until matching close paren
+    depth = 1
+    i = 0
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    args = rest[: i - 1]
+    attrs = rest[i:]
+    operands = re.findall(r"%([^\s,()]+)", args)
+    return type_str, opcode, operands, attrs
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _COMP_HDR_RE.match(stripped)
+                if m:
+                    cur = Computation(m.group(1))
+                    if stripped.startswith("ENTRY"):
+                        entry = cur.name
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        type_str, opcode, operands, attrs = _parse_rhs(rhs)
+        ins = Instr(name, opcode, type_str, operands, attrs, rhs)
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    return comps, entry
+
+
+def _dims_of(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = _shape_elems(ins.type_str)
+    lhs = comp.by_name.get(ins.operands[0])
+    if lhs is None:
+        return 0.0
+    lhs_dims = _dims_of(lhs.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    contract = 1
+    if m:
+        for d in m.group(1).split(","):
+            if d:
+                contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = _shape_elems(ins.type_str)
+    rhs = comp.by_name.get(ins.operands[1]) if len(ins.operands) > 1 else None
+    if rhs is None:
+        return 2.0 * out_elems
+    k_elems = _shape_elems(rhs.type_str)
+    out_dims = _dims_of(ins.type_str)
+    feat = out_dims[-1] if out_dims else 1  # approximation
+    return 2.0 * out_elems * max(k_elems // max(feat, 1), 1)
+
+
+def _trip_count(cond: Computation) -> float:
+    """Recover canonical scan trip count: s32 constant compared with LT."""
+    vals = []
+    for ins in cond.instrs:
+        if ins.opcode == "constant" and ins.type_str.strip().startswith(
+                ("s32", "s64", "u32", "u64")):
+            m = re.search(r"constant\((-?[0-9]+)\)", ins.raw)
+            if m:
+                vals.append(int(m.group(1)))
+    if not vals:
+        return 1.0
+    # canonical scans compare the induction variable LT length; pick the
+    # largest integer constant in the condition computation
+    return float(max(vals))
+
+
+def _comp_cost(comp: Computation, comps: Dict[str, Computation],
+               memo: Dict[str, HloCost]) -> HloCost:
+    if comp.name in memo:
+        return memo[comp.name]
+    cost = HloCost()
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op in _FREE_OPS:
+            continue
+        if op == "while":
+            m = re.search(r"condition=%?([^\s,]+),?\s*body=%?([^\s,]+)",
+                          ins.attrs)
+            if not m:
+                m = re.search(r"body=%?([^\s,]+),?\s*condition=%?([^\s,]+)",
+                              ins.attrs)
+                cond_n, body_n = (m.group(2), m.group(1)) if m else (None,
+                                                                     None)
+            else:
+                cond_n, body_n = m.group(1), m.group(2)
+            if body_n and body_n in comps:
+                trips = _trip_count(comps[cond_n]) if cond_n in comps else 1.0
+                body_cost = _comp_cost(comps[body_n], comps, memo)
+                cost.add(body_cost, trips)
+                if cond_n in comps:
+                    cost.add(_comp_cost(comps[cond_n], comps, memo),
+                             trips + 1)
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for target in re.findall(
+                    r"(?:to_apply|called_computations?|branch_computations)"
+                    r"=\{?%?([^\s,}]+)", ins.attrs):
+                if target in comps:
+                    cost.add(_comp_cost(comps[target], comps, memo))
+            continue
+
+        is_coll = None
+        for k in _COLL_KINDS:
+            if op == k or op == k + "-start":
+                is_coll = k
+                break
+        if is_coll:
+            b = _shape_bytes(ins.type_str)
+            cost.collective_bytes[is_coll] += b
+            cost.collective_counts[is_coll] += 1
+
+        if op.startswith(_MEM_OPS_PREFIX):
+            b = _shape_bytes(ins.type_str)
+            cost.bytes_lo += b
+            for o in ins.operands:
+                src = comp.by_name.get(o)
+                if src is not None:
+                    b += _shape_bytes(src.type_str)
+            cost.bytes += b
+
+        if op == "dot":
+            f = _dot_flops(ins, comp)
+            cost.flops += f
+            cost.dot_flops += f
+        elif op == "convolution":
+            f = _conv_flops(ins, comp)
+            cost.flops += f
+            cost.dot_flops += f
+        elif op == "fusion":
+            m = re.search(r"calls=%?([^\s,]+)", ins.attrs)
+            if m and m.group(1) in comps:
+                inner = _comp_cost(comps[m.group(1)], comps, memo)
+                cost.flops += inner.flops
+                cost.transcendentals += inner.transcendentals
+                # bytes already approximated at the fusion boundary
+        elif op in ("exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                    "sine", "cosine", "logistic", "exponential-minus-one",
+                    "log-plus-one", "atan2", "erf"):
+            cost.transcendentals += _shape_elems(ins.type_str)
+            cost.flops += _shape_elems(ins.type_str)
+        elif op in ("add", "subtract", "multiply", "divide", "maximum",
+                    "minimum", "negate", "abs", "compare", "select",
+                    "and", "or", "xor", "not", "clamp", "floor", "ceil",
+                    "round-nearest-afz", "round-nearest-even", "sign",
+                    "remainder", "convert", "reduce", "map"):
+            cost.flops += _shape_elems(ins.type_str)
+    memo[comp.name] = cost
+    return cost
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return HloCost()
+    memo: Dict[str, HloCost] = {}
+    total = HloCost()
+    total.add(_comp_cost(comps[entry], comps, memo))
+    total.collective_bytes = dict(total.collective_bytes)
+    total.collective_counts = dict(total.collective_counts)
+    return total

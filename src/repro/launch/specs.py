@@ -1,0 +1,167 @@
+"""ShapeDtypeStruct input specs + sharding trees for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns the exact abstract inputs a cell's
+step function is lowered with (weak-type-correct, shardable, no device
+allocation), plus which step function kind applies (train / prefill /
+decode).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.parallel.sharding import AxisRules, logical_to_spec, param_spec
+
+__all__ = ["input_specs", "sharding_trees", "abstract_params",
+           "abstract_opt_state", "abstract_cache"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract batch for the given (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        if shape.kind == "train" or shape.kind == "prefill":
+            D = min(cfg.dec_len, S)
+            return {
+                "frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                "dec_tokens": _sds((B, D), jnp.int32),
+                "labels": _sds((B, D), jnp.int32),
+            }
+        return {"tokens": _sds((B, 1), jnp.int32)}  # decode step input
+    if shape.kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32)}
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def batch_spec_tree(cfg, shape, rules: AxisRules):
+    """PartitionSpecs matching input_specs (batch over data axes)."""
+    abs_tree = input_specs(cfg, shape)
+
+    def leaf(name, logical):
+        return logical_to_spec(logical, rules,
+                               shape=tuple(abs_tree[name].shape))
+
+    if cfg.is_encdec and shape.kind in ("train", "prefill"):
+        return {
+            "frames": leaf("frames", ("batch", "seq", "embed")),
+            "dec_tokens": leaf("dec_tokens", ("batch", None)),
+            "labels": leaf("labels", ("batch", None)),
+        }
+    if shape.kind == "decode" or (cfg.is_encdec and shape.kind == "decode"):
+        return {"tokens": leaf("tokens", ("batch", None))}
+    out = {"tokens": leaf("tokens", ("batch", "seq"))}
+    if shape.kind == "train":
+        out["labels"] = leaf("labels", ("batch", "seq"))
+    return out
+
+
+def abstract_params(model, dtype=jnp.float32):
+    return jax.eval_shape(lambda k: model.init(k, dtype=dtype),
+                          jax.random.key(0))
+
+
+def abstract_opt_state(optimizer, params_abs):
+    return jax.eval_shape(optimizer.init, params_abs)
+
+
+def abstract_cache(model, cfg, shape, dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        frames = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        return jax.eval_shape(
+            lambda p, f: model.init_cache(p, f, cfg.dec_len, dtype=dtype),
+            abstract_params(model), frames)
+    return jax.eval_shape(
+        lambda: model.init_cache(B, S, dtype=dtype))
+
+
+def _spec_from_logical_tree(abs_tree, logical_tree, rules,
+                            *, params: bool):
+    """Map a logical-axis tree onto PartitionSpecs (leaf-wise)."""
+    is_leaf = lambda t: isinstance(t, tuple)
+    flat_abs, treedef = jax.tree_util.tree_flatten(abs_tree)
+    flat_log = treedef.flatten_up_to(
+        jax.tree.map(lambda t: t, logical_tree, is_leaf=is_leaf))
+
+    out = []
+    for a, l in zip(flat_abs, flat_log):
+        if params:
+            out.append(param_spec(a.shape, l, rules))
+        else:
+            out.append(logical_to_spec(l, rules, shape=tuple(a.shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sharding_trees(model, cfg, shape, optimizer, rules: AxisRules,
+                   mesh) -> Dict[str, Any]:
+    """NamedSharding trees for params / opt state / batch / cache."""
+    from jax.sharding import NamedSharding
+
+    def to_named(spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    params_abs = abstract_params(model)
+    logical = model.param_logical()
+    p_spec = _spec_from_logical_tree(params_abs, logical, rules,
+                                     params=True)
+    out = {"params_abs": params_abs, "params": to_named(p_spec)}
+
+    if shape.kind == "train":
+        opt_abs = abstract_opt_state(optimizer, params_abs)
+
+        def opt_leaf_spec(path_leaf):
+            return path_leaf  # placeholder; built below
+
+        # m/v follow the param spec; scalars and q8 scales replicate
+        from jax.sharding import PartitionSpec as P
+
+        def follow(abs_sub):
+            from repro.parallel.sharding import _dedup
+
+            flat_p, treedef_p = jax.tree_util.tree_flatten(params_abs)
+            flat_spec = treedef_p.flatten_up_to(p_spec)
+            # abs_sub has same structure as params, possibly with
+            # Quantized leaves (q + scale)
+            def match(a, s):
+                if hasattr(a, "q"):  # Quantized NamedTuple of abstracts
+                    # scales share the leading axes; the blocks axis keeps
+                    # the param's last-dim sharding only if it divides
+                    sc = P(*_dedup(list(s), tuple(a.scale.shape), rules))
+                    return type(a)(q=s, scale=sc)
+                return s
+            flat_a = treedef_p.flatten_up_to(abs_sub)
+            return treedef_p.unflatten(
+                [match(a, s) for a, s in zip(flat_a, flat_spec)])
+
+        if "per" in opt_abs:  # SoapGivens
+            o_spec = jax.tree.map(lambda _: P(), opt_abs)
+        else:
+            o_spec = {"step": P(),
+                      "m": follow(opt_abs["m"]),
+                      "v": follow(opt_abs["v"])}
+        out["opt_abs"] = opt_abs
+        out["opt"] = to_named(o_spec)
+
+    out["batch"] = to_named(batch_spec_tree(cfg, shape, rules))
+
+    if shape.kind == "decode":
+        cache_abs = abstract_cache(model, cfg, shape)
+        c_log = model.cache_logical()
+        c_spec = _spec_from_logical_tree(cache_abs, c_log, rules,
+                                         params=False)
+        out["cache_abs"] = cache_abs
+        out["cache"] = to_named(c_spec)
+    return out

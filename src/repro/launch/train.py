@@ -1,0 +1,86 @@
+"""Training launcher.
+
+Single-process CPU runs use reduced configs directly; on a real cluster
+the same script runs under ``jax.distributed`` with the production mesh
+(``--mesh single|multi``).  Fault tolerance: restores the newest complete
+checkpoint; straggler monitor reports slow steps.
+
+Examples::
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --reduced --steps 50 --batch 8 --seq 64
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --reduced --steps 50 --optimizer soap_givens
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.optim import AdamW, SoapGivens, warmup_cosine
+from repro.train import StragglerMonitor, TrainLoop, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="family-preserving tiny config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adamw_q8", "soap_givens"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    sched = warmup_cosine(args.lr, warmup=args.steps // 10 + 1,
+                          total=args.steps)
+    opt = {
+        "adamw": AdamW(lr=sched),
+        "adamw_q8": AdamW(lr=sched, quantized=True),
+        "soap_givens": SoapGivens(lr=sched),
+    }[args.optimizer]
+
+    step = jax.jit(make_train_step(model, cfg, opt, remat=False,
+                                   grad_accum=args.grad_accum))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch))
+    mon = StragglerMonitor()
+    mon.on_straggler = lambda s, dt, med: print(
+        f"  [straggler] step {s}: {dt:.2f}s vs median {med:.2f}s")
+
+    loop = TrainLoop(train_step=step, params=params,
+                     opt_state=opt.init(params), data_iter=data,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     monitor=mon)
+    start = loop.maybe_restore()
+    if start:
+        print(f"restored checkpoint at step {start}")
+    hist = loop.run(args.steps)
+    for i in range(0, len(hist["loss"]), args.log_every):
+        print(f"step {start + i + 1:5d}  loss {hist['loss'][i]:.4f}  "
+              f"{hist['time'][i]*1e3:.0f} ms")
+    print(f"final loss {hist['loss'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .zoo import build_model
+
+__all__ = ["build_model"]

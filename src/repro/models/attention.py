@@ -1,0 +1,384 @@
+"""GQA / MLA attention with RoPE, sliding windows and KV caches.
+
+Attention math is einsum-based (XLA fuses these into MXU-optimal HLO on
+TPU); RoPE routes through the planar-rotation machinery of the paper
+(``repro.kernels.rope``).  Both full-sequence (train/prefill) and
+single-token cached (decode) paths are provided.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rope.ref import apply_rope_ref, rope_tables
+from repro.parallel.sharding import shard
+
+from .layers import dense, dense_init, dense_spec, rmsnorm, rmsnorm_init, \
+    rmsnorm_spec, softcap
+
+__all__ = ["gqa_init", "gqa_spec", "gqa_attention", "gqa_decode",
+           "init_kv_cache", "mla_init", "mla_spec", "mla_attention",
+           "mla_decode", "init_mla_cache", "attn_mask"]
+
+
+# ---------------------------------------------------------------- GQA ----
+
+def gqa_init(key, cfg, dtype=jnp.float32):
+    d, H, Hk, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * Dh, dtype),
+        "wk": dense_init(ks[1], d, Hk * Dh, dtype),
+        "wv": dense_init(ks[2], d, Hk * Dh, dtype),
+        "wo": dense_init(ks[3], H * Dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["qn"] = rmsnorm_init(Dh, dtype)
+        p["kn"] = rmsnorm_init(Dh, dtype)
+    return p
+
+
+def gqa_spec(cfg):
+    p = {
+        "wq": dense_spec("embed", "heads"),
+        "wk": dense_spec("embed", "kv_heads"),
+        "wv": dense_spec("embed", "kv_heads"),
+        "wo": dense_spec("heads", "embed"),
+    }
+    if cfg.qk_norm:
+        p["qn"] = rmsnorm_spec()
+        p["kn"] = rmsnorm_spec()
+    return p
+
+
+def attn_mask(q_len: int, kv_len: int, window: Optional[int] = None,
+              causal: bool = True, q_offset: int = 0):
+    """(q_len, kv_len) boolean mask; ``q_offset`` = absolute pos of query 0."""
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    m = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def _proj_qkv(p, cfg, x, positions):
+    B, S, d = x.shape
+    H, Hk, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = shard(x, "batch", None, "embed")  # SP: gather seq at matmul entry
+    q = dense(p["wq"], x).reshape(B, S, H, Dh)
+    k = dense(p["wk"], x).reshape(B, S, Hk, Dh)
+    v = dense(p["wv"], x).reshape(B, S, Hk, Dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qn"], q)
+        k = rmsnorm(p["kn"], k)
+    if cfg.pos_type == "rope":
+        base = positions.get("rope_base", cfg.rope_base)
+        cos, sin = rope_tables(positions["pos"], Dh, base, dtype=q.dtype)
+        q = apply_rope_ref(q, cos, sin)
+        k = apply_rope_ref(k, cos, sin)
+    # Megatron-SP convention: sequence is sharded BETWEEN blocks only;
+    # inside attention the activations shard over batch x heads (seq must
+    # be whole for the flash chunk scan — Shardy otherwise falls back to
+    # full rematerialization/replication of the attention internals)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+_FLASH_CHUNK = 512
+
+
+def _sdpa_dense(qg, k, v, mask, scale, cap):
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k) * scale
+    logits = softcap(logits, cap)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(qg.dtype)
+    return jnp.einsum("bhgst,bthd->bshgd", w, v)
+
+
+def _sdpa_flash(qg, k, v, scale, cap, *, causal, window, q_offset):
+    """Chunked online-softmax attention (flash-style, pure jnp).
+
+    Never materializes the (S, T) score matrix OR the (S, T) mask: scans
+    key/value chunks with running (max, denominator, accumulator) and
+    rebuilds each chunk's causal/window mask from position arithmetic.
+    This is the XLA-level form of the TPU flash kernel — it lowers on
+    every backend (the dry-run compiles on the CPU backend where a Pallas
+    TPU kernel cannot), and keeps attention temp memory O(S * chunk).
+    """
+    B, S, Hk, G, Dh = qg.shape
+    T = k.shape[1]
+    C = _FLASH_CHUNK
+    nC = T // C
+    kc = k.reshape(B, nC, C, Hk, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nC, C, Hk, Dh).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(S) + q_offset
+
+    def step(carry, xs):
+        m_run, d_run, acc = carry
+        kb, vb, cidx = xs
+        s = jnp.einsum("bshgd,bthd->bhgst", qg, kb) * scale  # (B,Hk,G,S,C)
+        s = softcap(s, cap).astype(jnp.float32)
+        kpos = cidx * C + jnp.arange(C)
+        mb = jnp.ones((S, C), bool)
+        if causal:
+            mb &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mb &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mb[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        d_new = d_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha.astype(acc.dtype)[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd", p.astype(qg.dtype), vb).astype(acc.dtype)
+        return (m_new, d_new, acc), None
+
+    m0 = jnp.full((B, Hk, G, S), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((B, Hk, G, S), jnp.float32)
+    acc0 = jnp.zeros((B, Hk, G, S, Dh), qg.dtype)
+    # checkpoint the chunk step: the backward pass recomputes the chunk
+    # probabilities instead of storing (B,H,S,C) residuals per chunk
+    (m, d, acc), _ = jax.lax.scan(
+        jax.checkpoint(step, prevent_cse=False), (m0, d0, acc0),
+        (kc, vc, jnp.arange(nC)))
+    o = acc / jnp.maximum(d, 1e-30)[..., None].astype(qg.dtype)
+    return o.transpose(0, 3, 1, 2, 4)  # (B,S,Hk,G,Dh)
+
+
+def _sdpa(q, k, v, mask, scale, cap=0.0, *, causal=True, window=None,
+          q_offset=0):
+    """q (B,S,H,D), k/v (B,T,Hk,D) with H = G*Hk.
+
+    When the query length is large, routes to the chunked flash path and
+    derives masks from ``causal``/``window``/``q_offset`` (``mask`` is
+    ignored there and may be None); small-S (decode) uses the dense path
+    with the explicit ``mask``.
+    """
+    B, S, H, Dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, S, Hk, G, Dh)
+    if S >= 64 and T >= 2 * _FLASH_CHUNK and T % _FLASH_CHUNK == 0:
+        o = _sdpa_flash(qg, k, v, scale, cap, causal=causal,
+                        window=window, q_offset=q_offset)
+    else:
+        o = _sdpa_dense(qg, k, v, mask, scale, cap)
+    return o.reshape(B, S, H * Dh)
+
+
+def gqa_attention(p, cfg, x, *, window=None, rope_base=None, q_offset=0):
+    """Full-sequence causal attention (train / prefill)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S) + q_offset
+    q, k, v = _proj_qkv(p, cfg, x, {
+        "pos": pos, "rope_base": rope_base or cfg.rope_base})
+    mask = (attn_mask(S, S, window=window) if S < _FLASH_CHUNK else None)
+    o = _sdpa(q, k, v, mask, cfg.head_dim ** -0.5, causal=True,
+              window=window)
+    o = shard(o, "batch", None, "heads")
+    return dense(p["wo"], o), (k, v)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16):
+    Hk, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, Hk, Dh), dtype),
+        "v": jnp.zeros((n_layers, batch, max_len, Hk, Dh), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def gqa_decode(p, cfg, x, k_cache, v_cache, idx, *, window=None,
+               rope_base=None):
+    """Single-token decode: x (B, 1, d); cache (B, T, Hk, Dh).
+
+    When the cache is *window-sized* (``T <= window``, allocated by
+    ``init_cache`` for sliding-window layers) it is treated as a ring
+    buffer: slot ``idx % T`` is overwritten and, because softmax is
+    permutation-invariant and RoPE phases are baked into cached keys at
+    write time, no reordering is needed — a 1024-slot cache serves a
+    524288-token stream (hillclimb fix for ``gemma3 long_500k``).
+    """
+    B, _, d = x.shape
+    T = k_cache.shape[1]
+    q, k, v = _proj_qkv(p, cfg, x, {
+        "pos": jnp.full((1,), idx), "rope_base": rope_base or cfg.rope_base})
+    ring = window is not None and T <= window
+    slot = idx % T if ring else idx
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    kpos = jnp.arange(T)
+    mask = (kpos <= idx)  # once idx >= T every ring slot is valid
+    if window is not None and not ring:
+        mask &= kpos > idx - window
+    o = _sdpa(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+              mask[None, :], cfg.head_dim ** -0.5)
+    return dense(p["wo"], o), k_cache, v_cache
+
+
+# ---------------------------------------------------------------- MLA ----
+
+def mla_init(key, cfg, dtype=jnp.float32):
+    """DeepSeek-style multi-head latent attention."""
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.q_lora:
+        p["wq_a"] = dense_init(ks[0], d, cfg.q_lora, dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora, dtype)
+        p["wq_b"] = dense_init(ks[1], cfg.q_lora, H * (dn + dr), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d, H * (dn + dr), dtype)
+    p["wkv_a"] = dense_init(ks[2], d, cfg.kv_lora + dr, dtype)
+    p["kv_norm"] = rmsnorm_init(cfg.kv_lora, dtype)
+    p["wkv_b"] = dense_init(ks[3], cfg.kv_lora, H * (dn + dv), dtype)
+    p["wo"] = dense_init(ks[4], H * dv, d, dtype)
+    return p
+
+
+def mla_spec(cfg):
+    p = {}
+    if cfg.q_lora:
+        p["wq_a"] = dense_spec("embed", None)
+        p["q_norm"] = rmsnorm_spec()
+        p["wq_b"] = dense_spec(None, "heads")
+    else:
+        p["wq"] = dense_spec("embed", "heads")
+    p["wkv_a"] = dense_spec("embed", None)
+    p["kv_norm"] = rmsnorm_spec()
+    p["wkv_b"] = dense_spec(None, "heads")
+    p["wo"] = dense_spec("heads", "embed")
+    return p
+
+
+def _mla_qkv(p, cfg, x, pos):
+    B, S, d = x.shape
+    x = shard(x, "batch", None, "embed")  # SP: gather seq at matmul entry
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if cfg.q_lora:
+        q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = dense(p["wkv_a"], x)
+    c_kv, k_rope = kv[..., :cfg.kv_lora], kv[..., cfg.kv_lora:]
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    cos, sin = rope_tables(pos, dr, cfg.rope_base, dtype=q.dtype)
+    q_rope = apply_rope_ref(q_rope, cos, sin)
+    k_rope = apply_rope_ref(k_rope[:, :, None, :], cos, sin)  # shared head
+    q_nope = shard(q_nope, "batch", None, "heads", None)
+    q_rope = shard(q_rope, "batch", None, "heads", None)
+    c_kv = shard(c_kv, "batch", None, None)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, mask, *,
+                q_offset=0):
+    """Latent attention: scores from compressed cache (c_kv, k_rope).
+
+    Large query lengths route through a chunked online-softmax over the
+    latent cache (the MLA flash form: the accumulator lives in the
+    ``kv_lora`` latent space, up-projection happens once at the end).
+    """
+    B, S, H, dn = q_nope.shape
+    T = c_kv.shape[1]
+    dv = cfg.v_head_dim
+    L = cfg.kv_lora
+    wkv_b = p["wkv_b"]["w"].reshape(L, H, dn + dv)
+    wk_b, wv_b = wkv_b[..., :dn], wkv_b[..., dn:]
+    # fold k up-projection into q (absorbed form): q~ = q_nope @ wk_b^T
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, wk_b.astype(q_nope.dtype))
+    scale = (dn + cfg.qk_rope_dim) ** -0.5
+
+    if S >= 64 and T >= 2 * _FLASH_CHUNK and T % _FLASH_CHUNK == 0:
+        C = _FLASH_CHUNK
+        nC = T // C
+        ckv_c = c_kv.reshape(B, nC, C, L).transpose(1, 0, 2, 3)
+        kr_c = k_rope.reshape(B, nC, C, -1).transpose(1, 0, 2, 3)
+        qpos = jnp.arange(S) + q_offset
+
+        def step(carry, xs):
+            m_run, d_run, acc = carry
+            ckb, krb, cidx = xs
+            s = (jnp.einsum("bshl,btl->bhst", q_lat, ckb)
+                 + jnp.einsum("bshd,btd->bhst", q_rope, krb)) * scale
+            s = s.astype(jnp.float32)
+            kpos = cidx * C + jnp.arange(C)
+            mb = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(mb[None, None], s, -1e30)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            pch = jnp.exp(s - m_new[..., None])
+            d_new = d_run * alpha + jnp.sum(pch, axis=-1)
+            acc = acc * alpha.astype(acc.dtype)[..., None] + jnp.einsum(
+                "bhst,btl->bhsl", pch.astype(q_lat.dtype),
+                ckb).astype(acc.dtype)
+            return (m_new, d_new, acc), None
+
+        m0 = jnp.full((B, H, S), -jnp.inf, jnp.float32)
+        d0 = jnp.zeros((B, H, S), jnp.float32)
+        acc0 = jnp.zeros((B, H, S, L), q_lat.dtype)
+        (m, d, acc), _ = jax.lax.scan(
+            jax.checkpoint(step, prevent_cse=False), (m0, d0, acc0),
+            (ckv_c, kr_c, jnp.arange(nC)))
+        o_lat = (acc / jnp.maximum(d, 1e-30)[..., None].astype(acc.dtype)
+                 ).transpose(0, 2, 1, 3)  # (B,S,H,L)
+    else:
+        logits = (jnp.einsum("bshl,btl->bhst", q_lat, c_kv)
+                  + jnp.einsum("bshd,btd->bhst", q_rope, k_rope)) * scale
+        if mask is not None:
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(
+            q_nope.dtype)
+        o_lat = jnp.einsum("bhst,btl->bshl", w, c_kv)
+    o = jnp.einsum("bshl,lhd->bshd", o_lat, wv_b.astype(o_lat.dtype))
+    return dense(p["wo"], o.reshape(B, S, H * dv))
+
+
+def mla_attention(p, cfg, x, *, q_offset=0):
+    B, S, _ = x.shape
+    pos = jnp.arange(S) + q_offset
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, pos)
+    mask = attn_mask(S, S) if S < _FLASH_CHUNK else None
+    out = _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope[:, :, 0], mask,
+                      q_offset=q_offset)
+    return out, (c_kv, k_rope[:, :, 0])
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, n_layers: int,
+                   dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((n_layers, batch, max_len, cfg.kv_lora), dtype),
+        "kr": jnp.zeros((n_layers, batch, max_len, cfg.qk_rope_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode(p, cfg, x, ckv_cache, kr_cache, idx):
+    B = x.shape[0]
+    pos = jnp.full((1,), idx)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, pos)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), idx, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, k_rope[:, :, 0].astype(kr_cache.dtype), idx, axis=1)
+    T = ckv_cache.shape[1]
+    mask = (jnp.arange(T) <= idx)[None, :]
+    out = _mla_attend(p, cfg, q_nope, q_rope,
+                      ckv_cache.astype(x.dtype),
+                      kr_cache.astype(x.dtype), mask)
+    return out, ckv_cache, kr_cache

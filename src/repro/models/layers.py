@@ -1,0 +1,120 @@
+"""Shared neural-net building blocks (functional, pure JAX).
+
+Parameters are plain nested dicts of ``jax.Array``.  Each ``init_*``
+helper has a ``spec_*`` twin producing the matching pytree of *logical
+axis tuples* used by ``repro.parallel.sharding`` to derive
+``PartitionSpec``s — model definitions stay sharding-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+__all__ = [
+    "dense_init", "dense_spec", "dense",
+    "rmsnorm_init", "rmsnorm_spec", "rmsnorm",
+    "layernorm_init", "layernorm_spec", "layernorm",
+    "embed_init", "embed_spec",
+    "mlp_init", "mlp_spec", "mlp_swiglu", "mlp_gelu",
+    "softcap",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+
+
+def dense_spec(l_in: Optional[str], l_out: Optional[str]):
+    return {"w": (l_in, l_out)}
+
+
+def dense(p, x):
+    return x @ p["w"].astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.zeros((d,), dtype)}  # gemma-style (1 + g)
+
+
+def rmsnorm_spec():
+    return {"g": (None,)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["g"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm_spec():
+    return {"g": (None,), "b": (None,)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)
+            + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"e": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed_spec():
+    return {"e": ("vocab", "embed")}
+
+
+def mlp_init(key, d: int, d_ff: int, gated: bool, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(k1, d, d_ff, dtype),
+        "down": dense_init(k2, d_ff, d, dtype),
+    }
+    if gated:
+        p["gate"] = dense_init(k3, d, d_ff, dtype)
+    return p
+
+
+def mlp_spec(gated: bool):
+    p = {
+        "up": dense_spec("embed", "ff"),
+        "down": dense_spec("ff", "embed"),
+    }
+    if gated:
+        p["gate"] = dense_spec("embed", "ff")
+    return p
+
+
+def mlp_swiglu(p, x):
+    # Megatron-SP: gather seq before the matmuls so the ff-sharded weights
+    # are used in place (otherwise GSPMD all-gathers the full weight)
+    x = shard(x, "batch", None, "embed")
+    h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    h = shard(h, "batch", None, "ff")
+    return dense(p["down"], h)
+
+
+def mlp_gelu(p, x):
+    x = shard(x, "batch", None, "embed")
+    h = jax.nn.gelu(dense(p["up"], x))
+    h = shard(h, "batch", None, "ff")
+    return dense(p["down"], h)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,278 @@
+"""Mamba-2 (SSD, state-space duality) — attention-free LM.
+
+Chunked SSD algorithm (Dao & Gu 2024): the sequence is split into chunks;
+within a chunk the dual quadratic form computes token-token interactions
+masked by the discretized decay; across chunks a recurrent state
+``h (B, H, P, N)`` carries.  Training/prefill use the chunked form (scan
+over chunks); decode uses the pure recurrence.
+
+The paper's technique (rotation sequences) does not apply inside an
+attention-free SSM block (no positional rotations); it still reaches this
+arch through the SOAP-Givens optimizer (see DESIGN.md SSArch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .layers import (dense, dense_init, dense_spec, embed_init, embed_spec,
+                     rmsnorm, rmsnorm_init, rmsnorm_spec)
+
+__all__ = ["Mamba2"]
+
+
+def _ssd_chunked(xbar, dtA, Bm, Cm, chunk: int):
+    """Chunked SSD.
+
+    xbar (B, L, H, P): dt-scaled inputs; dtA (B, L, H): log-decay per step;
+    Bm/Cm (B, L, G, N) with H = G * (H // G).
+    Returns y (B, L, H, P).
+    """
+    B, L, H, P = xbar.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = chunk
+    # pad to a whole number of chunks: zero rows are exact no-ops in SSD
+    # (dt=0 -> decay 1, B=0 -> no state update, masked outputs dropped)
+    L_out = L
+    Lp = -(-L // Q) * Q
+    if Lp != L:
+        pad = [(0, 0), (0, Lp - L)]
+        xbar = jnp.pad(xbar, pad + [(0, 0), (0, 0)])
+        dtA = jnp.pad(dtA, pad + [(0, 0)])
+        Bm = jnp.pad(Bm, pad + [(0, 0), (0, 0)])
+        Cm = jnp.pad(Cm, pad + [(0, 0), (0, 0)])
+        L = Lp
+    nC = L // Q
+    hg = H // G
+
+    def resh(t, extra):
+        return t.reshape((B, nC, Q) + extra)
+
+    xb = resh(xbar, (H, P))
+    dA = resh(dtA, (H,))
+    Bc = resh(Bm, (G, N))
+    Cc = resh(Cm, (G, N))
+
+    cum = jnp.cumsum(dA, axis=2)                      # (B,nC,Q,H)
+    seg = cum[:, :, :, None] - cum[:, :, None, :]     # (B,nC,Qi,Qj,H)
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])
+    Lmask = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk (dual quadratic form)
+    scores = jnp.einsum("bcqgn,bckgn->bcqkg", Cc, Bc)  # (B,nC,Qi,Qj,G)
+    scores = jnp.repeat(scores, hg, axis=-1)           # expand to H
+    M = scores * Lmask
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xb)
+
+    # chunk states: S_c = sum_j exp(cum_end - cum_j) B_j x_j^T
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nC,Q,H)
+    Bh = jnp.repeat(Bc, hg, axis=3)                    # (B,nC,Q,H,N)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                   decay_end, Bh, xb)                  # (B,nC,H,N,P)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B,nC,H)
+
+    def step(h, xs):
+        dec, s = xs
+        h_new = dec[:, :, None, None] * h + s
+        return h_new, h                                 # emit h BEFORE chunk
+
+    h0 = jnp.zeros((B, H, N, P), xbar.dtype)
+    _, hprev = jax.lax.scan(
+        step, h0, (chunk_decay.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    hprev = hprev.transpose(1, 0, 2, 3, 4)             # (B,nC,H,N,P)
+
+    # inter-chunk output: y_j += C_j exp(cum_j) h_prev
+    decay_in = jnp.exp(cum)                            # (B,nC,Q,H)
+    Ch = jnp.repeat(Cc, hg, axis=3)                    # (B,nC,Q,H,N)
+    y_inter = jnp.einsum("bcqh,bcqhn,bchnp->bcqhp", decay_in, Ch, hprev)
+
+    return (y_intra + y_inter).reshape(B, L, H, P)[:, :L_out]
+
+
+class Mamba2:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.d_inner = cfg.ssm_expand * cfg.d_model
+        self.H = self.d_inner // cfg.ssm_head_dim
+        self.G = cfg.ssm_groups
+        self.N = cfg.ssm_state
+        self.conv_dim = self.d_inner + 2 * self.G * self.N
+
+    # ----------------------------------------------------------- init ----
+
+    def _block_init(self, key, dtype):
+        cfg = self.cfg
+        d, di, H = cfg.d_model, self.d_inner, self.H
+        ks = jax.random.split(key, 4)
+        proj_out = 2 * di + 2 * self.G * self.N + H
+        return {
+            "norm": rmsnorm_init(d, dtype),
+            "in_proj": dense_init(ks[0], d, proj_out, dtype),
+            "conv_w": jax.random.normal(ks[1], (cfg.conv_width,
+                                                self.conv_dim), dtype) * 0.2,
+            "conv_b": jnp.zeros((self.conv_dim,), dtype),
+            "A_log": jnp.zeros((H,), dtype),
+            "D": jnp.ones((H,), dtype),
+            "dt_bias": jnp.zeros((H,), dtype),
+            "out_norm": rmsnorm_init(di, dtype),
+            "out_proj": dense_init(ks[2], di, d, dtype),
+        }
+
+    def _block_spec(self):
+        return {
+            "norm": rmsnorm_spec(),
+            "in_proj": dense_spec("embed", "ff"),
+            "conv_w": (None, "ff"),
+            "conv_b": ("ff",),
+            "A_log": (None,),
+            "D": (None,),
+            "dt_bias": (None,),
+            "out_norm": rmsnorm_spec(),
+            "out_proj": dense_spec("ff", "embed"),
+        }
+
+    def init(self, key, dtype=jnp.float32):
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 2)
+        blocks = [self._block_init(keys[i], dtype)
+                  for i in range(cfg.n_layers)]
+        return {
+            "embed": embed_init(keys[-1], cfg.vocab, cfg.d_model, dtype),
+            "ln_f": rmsnorm_init(cfg.d_model, dtype),
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        }
+
+    def param_logical(self):
+        spec = self._block_spec()
+        return {
+            "embed": embed_spec(),
+            "ln_f": rmsnorm_spec(),
+            "blocks": jax.tree.map(lambda t: (None,) + t, spec,
+                                   is_leaf=lambda t: isinstance(t, tuple)),
+        }
+
+    # ------------------------------------------------------- block fwd ----
+
+    def _split_proj(self, zxbcdt):
+        di, G, N, H = self.d_inner, self.G, self.N, self.H
+        z = zxbcdt[..., :di]
+        xBC = zxbcdt[..., di:di + self.conv_dim]
+        dt = zxbcdt[..., di + self.conv_dim:]
+        return z, xBC, dt
+
+    def _block_fwd(self, p, x):
+        cfg = self.cfg
+        Bsz, L, d = x.shape
+        di, G, N, H, P = (self.d_inner, self.G, self.N, self.H,
+                          cfg.ssm_head_dim)
+        h = shard(rmsnorm(p["norm"], x), "batch", None, "embed")
+        z, xBC, dt = self._split_proj(dense(p["in_proj"], h))
+        # temporal mixing needs the whole sequence: batch/ff sharding only
+        z = shard(z, "batch", None, "ff")
+        xBC = shard(xBC, "batch", None, "ff")
+
+        # causal depthwise conv over xBC
+        w = p["conv_w"].astype(x.dtype)
+        pad = jnp.pad(xBC, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
+        conv = sum(w[i] * pad[:, i:i + L] for i in range(cfg.conv_width))
+        xBC = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+
+        xs = xBC[..., :di].reshape(Bsz, L, H, P)
+        Bm = xBC[..., di:di + G * N].reshape(Bsz, L, G, N)
+        Cm = xBC[..., di + G * N:].reshape(Bsz, L, G, N)
+
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        dtA = (dt * A[None, None]).astype(x.dtype)      # (B,L,H)
+        xbar = xs * dt[..., None].astype(x.dtype)
+
+        y = _ssd_chunked(xbar, dtA, Bm, Cm, min(cfg.ssm_chunk, L))
+        y = y + p["D"].astype(x.dtype)[None, None, :, None] * xs
+        y = y.reshape(Bsz, L, di)
+        y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+        return x + dense(p["out_proj"], y)
+
+    def forward(self, params, tokens, *, remat: bool = True):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed"]["e"].astype(dt)[tokens]
+        x = shard(x, "batch", "seq", "embed")
+
+        def body(x, bp):
+            return self._block_fwd(bp, x), None
+
+        f = jax.checkpoint(body, prevent_cse=False) if remat else body
+        x, _ = jax.lax.scan(f, x, params["blocks"])
+        x = rmsnorm(params["ln_f"], x)
+        x = shard(x, "batch", None, "embed")
+        return x @ params["embed"]["e"].astype(dt).T
+
+    # ---------------------------------------------------------- decode ----
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32):
+        cfg = self.cfg
+        return {
+            "idx": jnp.zeros((), jnp.int32),
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1,
+                               self.conv_dim), dtype),
+            "ssm": jnp.zeros((cfg.n_layers, batch, self.H, self.N,
+                              cfg.ssm_head_dim), dtype),
+        }
+
+    def cache_logical(self):
+        return {
+            "idx": (),
+            "conv": (None, "batch", None, "ff"),
+            "ssm": (None, "batch", None, None, None),
+        }
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        dtp = jnp.dtype(cfg.dtype)
+        x = params["embed"]["e"].astype(dtp)[tokens]  # (B, 1, d)
+        di, G, N, H, P = (self.d_inner, self.G, self.N, self.H,
+                          cfg.ssm_head_dim)
+
+        def body(x, xs):
+            bp, conv_st, ssm_st = xs
+            h = rmsnorm(bp["norm"], x)
+            z, xBC, dt = self._split_proj(dense(bp["in_proj"], h))
+            # conv via state
+            hist = jnp.concatenate([conv_st, xBC], axis=1)  # (B, W, dim)
+            w = bp["conv_w"].astype(x.dtype)
+            conv = jnp.einsum("wd,bwd->bd", w, hist)[:, None]
+            xBC_o = jax.nn.silu(conv + bp["conv_b"].astype(x.dtype))
+            Bsz = x.shape[0]
+            xs_ = xBC_o[..., :di].reshape(Bsz, H, P)
+            Bm = xBC_o[..., di:di + G * N].reshape(Bsz, G, N)
+            Cm = xBC_o[..., di + G * N:].reshape(Bsz, G, N)
+            A = -jnp.exp(bp["A_log"].astype(jnp.float32))
+            dts = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                                  + bp["dt_bias"].astype(jnp.float32))
+            dA = jnp.exp(dts * A[None]).astype(x.dtype)      # (B,H)
+            xbar = xs_ * dts[..., None].astype(x.dtype)
+            Bh = jnp.repeat(Bm, H // G, axis=1)              # (B,H,N)
+            Ch = jnp.repeat(Cm, H // G, axis=1)
+            ssm_new = (dA[:, :, None, None] * ssm_st
+                       + Bh[..., None] * xbar[:, :, None, :])
+            y = jnp.einsum("bhn,bhnp->bhp", Ch, ssm_new)
+            y = y + bp["D"].astype(x.dtype)[None, :, None] * xs_
+            y = y.reshape(Bsz, 1, di)
+            y = rmsnorm(bp["out_norm"], y * jax.nn.silu(z))
+            x = x + dense(bp["out_proj"], y)
+            return x, (hist[:, 1:], ssm_new)
+
+        x, (conv_new, ssm_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+        x = rmsnorm(params["ln_f"], x)
+        logits = x @ params["embed"]["e"].astype(dtp).T
+        return logits, {"idx": cache["idx"] + 1, "conv": conv_new,
+                        "ssm": ssm_new}

@@ -1,0 +1,159 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch (EP-ready).
+
+Top-k routing with a per-expert capacity.  Dispatch/combine use
+scatter-add / gather with ``(tokens, slots)`` index arrays rather than the
+GShard ``(tokens, experts, capacity)`` one-hot mask — the mask costs an
+extra factor ``E`` of memory (terabytes at kimi-k2 scale) while the
+scatter formulation stays at the true activation volume
+``tokens * top_k * capacity_factor * d_model``.
+
+Expert weights are stacked ``(E, d, d_ff)`` and logically sharded on the
+"experts" axis (-> "model" mesh axis = expert parallelism); under GSPMD
+the dispatch scatter lowers to the EP all-to-all.  Shared experts
+(DeepSeek-style) run densely for every token.  Dropped tokens (capacity
+overflow) contribute zero — standard capacity semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .layers import dense_init, dense_spec, mlp_init, mlp_spec, mlp_swiglu
+
+__all__ = ["moe_init", "moe_spec", "moe_ffn", "moe_ffn_dense_ref"]
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, E, dff = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    kr, ke, ks = jax.random.split(key, 3)
+    ek = jax.random.split(ke, 3)
+    p = {
+        "router": dense_init(kr, d, E, dtype, scale=0.02),
+        "w_gate": jax.random.normal(ek[0], (E, d, dff), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(ek[1], (E, d, dff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(ek[2], (E, dff, d), dtype) * dff ** -0.5,
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks, d, dff * cfg.n_shared_experts, True,
+                               dtype)
+    return p
+
+
+def moe_spec(cfg):
+    p = {
+        "router": dense_spec("embed", None),
+        "w_gate": ("experts", "embed", None),
+        "w_up": ("experts", "embed", None),
+        "w_down": ("experts", None, "embed"),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_spec(True)
+    return p
+
+
+def moe_ffn(p, cfg, x, *, n_chunks: int = 1):
+    """x (B, S, d) -> (B, S, d); top-k routed + optional shared experts.
+
+    **Device-local dispatch**: tokens are split into ``n_chunks`` groups
+    (aligned with the data-parallel sharding) and every chunk owns its own
+    capacity slice of every expert, so all scatter/gather indices are
+    chunk-local.  With a single global capacity buffer the scatter
+    positions cross data shards and GSPMD must replicate the dispatch
+    (measured 203 GiB/chip on deepseek); with chunk-local capacity the
+    buffer shards as ("batch", "experts", ...) and each data shard
+    computes only its own slice of every expert — the standard
+    hierarchical-EP formulation (local capacity per device).
+
+    Default ``n_chunks=1`` = the global-dispatch baseline: the dry-run
+    measured that XLA's scatter partitioner does not yet exploit the
+    chunk alignment under GSPMD (collectives grew 14x) — see
+    EXPERIMENTS.md SSPerf kimi iteration; a shard_map dispatch is the
+    future fix, the chunked code path is kept (and tested) for it.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    xt = x.reshape(N, d)
+    xt = shard(xt, "batch", None)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)        # (N, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # exact (drop-free) routing for small token counts — serving steps
+    # must be deterministic and independent of co-batched tokens;
+    # capacity-bounded routing (local-capacity semantics) for training
+    C = n_chunks if (N * K > 4096 and N % n_chunks == 0) else 1
+    Nl = N // C
+    if N * K <= 4096:
+        cap = Nl * K
+    else:
+        cap = max(K, int(cfg.capacity_factor * Nl * K / E))
+
+    # chunk-local slot positions (sort-based, O(N log N) memory; an
+    # (N*K, E) one-hot cumsum would be terabytes at kimi-k2 scale)
+    ids = gate_idx.reshape(C, Nl * K)
+    order = jnp.argsort(ids, axis=1)
+    sorted_ids = jnp.take_along_axis(ids, order, axis=1)
+    starts = jax.vmap(
+        lambda srt: jnp.searchsorted(srt, jnp.arange(E)))(sorted_ids)
+    pos_sorted = (jnp.arange(Nl * K)[None]
+                  - jnp.take_along_axis(starts, sorted_ids, axis=1))
+    pos_flat = jnp.zeros((C, Nl * K), jnp.int32).at[
+        jnp.arange(C)[:, None], order].set(pos_sorted.astype(jnp.int32))
+    pos = pos_flat.reshape(C, Nl, K)
+    keep = pos < cap
+    posc = jnp.where(keep, pos, cap - 1)
+    keepf = keep.astype(xt.dtype)
+    idx_c = gate_idx.reshape(C, Nl, K)
+
+    # dispatch: chunk-local scatter into (C, E, cap, d) buffers
+    xc = shard(xt.reshape(C, Nl, d), "batch", None, None)
+    buf = jnp.zeros((C, E, cap, d), xt.dtype)
+    upd = xc[:, :, None, :] * keepf[..., None]           # (C, Nl, K, d)
+    buf = buf.at[jnp.arange(C)[:, None, None], idx_c, posc].add(upd)
+    buf = shard(buf, "batch", "experts", None, None)
+
+    # expert FFN (stacked SwiGLU) on the MXU
+    h = jnp.einsum("cend,edf->cenf", buf, p["w_gate"].astype(xt.dtype))
+    u = jnp.einsum("cend,edf->cenf", buf, p["w_up"].astype(xt.dtype))
+    ye = jnp.einsum("cenf,efd->cend", jax.nn.silu(h) * u,
+                    p["w_down"].astype(xt.dtype))
+    ye = shard(ye, "batch", "experts", None, None)
+
+    # combine: chunk-local gather back, mix with gate values
+    yk = ye[jnp.arange(C)[:, None, None], idx_c, posc]   # (C, Nl, K, d)
+    ys = jnp.sum(
+        yk * (gate_vals.reshape(C, Nl, K).astype(xt.dtype)
+              * keepf)[..., None], axis=2)
+
+    out = ys.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        out = out + mlp_swiglu(p["shared"], x)
+    return out
+
+
+def moe_ffn_dense_ref(p, cfg, x):
+    """Oracle: evaluate every expert densely, mask by top-k (tests only)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    h = jnp.einsum("nd,edf->enf", xt, p["w_gate"].astype(xt.dtype))
+    u = jnp.einsum("nd,edf->enf", xt, p["w_up"].astype(xt.dtype))
+    ye = jnp.einsum("enf,efd->end", jax.nn.silu(h) * u,
+                    p["w_down"].astype(xt.dtype))
+    w = jnp.zeros((xt.shape[0], E), xt.dtype)
+    w = jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=xt.dtype)
+                * gate_vals[..., None].astype(xt.dtype), axis=1)
+    ys = jnp.einsum("en,end->nd", w.T, ye)
+    out = ys.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        out = out + mlp_swiglu(p["shared"], x)
+    return out

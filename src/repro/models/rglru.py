@@ -1,0 +1,292 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA.
+
+Pattern (R, R, A): two recurrent residual blocks per local-attention
+block; every temporal block is followed by a GeGLU MLP block.  The RG-LRU
+linear recurrence ``h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)`` is
+evaluated with ``jax.lax.associative_scan`` for train/prefill and a single
+fused step for decode.  Attention layers use sliding-window MQA with RoPE
+(the paper's rotations), so the KV cache is bounded by the window even for
+the 500k-token cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .attention import gqa_attention, gqa_decode, gqa_init, gqa_spec
+from .layers import (dense, dense_init, dense_spec, embed_init, embed_spec,
+                     mlp_gelu, mlp_init, mlp_spec, rmsnorm, rmsnorm_init,
+                     rmsnorm_spec)
+
+__all__ = ["RecurrentHybrid"]
+
+_PATTERN = ("rec", "rec", "attn")
+
+
+class RecurrentHybrid:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.lru = cfg.lru_width or cfg.d_model
+        n = cfg.n_layers
+        self.reps = n // 3
+        self.tail = tuple(_PATTERN[: n % 3])
+
+    # ----------------------------------------------------------- init ----
+
+    def _temporal_init(self, key, kind, dtype):
+        cfg = self.cfg
+        d, w = cfg.d_model, self.lru
+        if kind == "attn":
+            return {"attn": gqa_init(key, cfg, dtype)}
+        ks = jax.random.split(key, 6)
+        return {
+            "in_x": dense_init(ks[0], d, w, dtype),
+            "in_y": dense_init(ks[1], d, w, dtype),
+            "conv_w": jax.random.normal(ks[2], (cfg.conv_width, w),
+                                        dtype) * 0.2,
+            "conv_b": jnp.zeros((w,), dtype),
+            "gate_a": dense_init(ks[3], w, w, dtype),
+            "gate_i": dense_init(ks[4], w, w, dtype),
+            "lam": jnp.full((w,), 2.0, dtype),  # sigmoid(2) ~ .88 decay
+            "out": dense_init(ks[5], w, d, dtype),
+        }
+
+    def _temporal_spec(self, kind):
+        if kind == "attn":
+            return {"attn": gqa_spec(self.cfg)}
+        return {
+            "in_x": dense_spec("embed", "ff"),
+            "in_y": dense_spec("embed", "ff"),
+            "conv_w": (None, "ff"),
+            "conv_b": ("ff",),
+            "gate_a": dense_spec("ff", None),
+            "gate_i": dense_spec("ff", None),
+            "lam": ("ff",),
+            "out": dense_spec("ff", "embed"),
+        }
+
+    def _block_init(self, key, kind, dtype):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "temporal": self._temporal_init(k1, kind, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, True, dtype),
+        }
+
+    def _block_spec(self, kind):
+        return {
+            "ln1": rmsnorm_spec(),
+            "temporal": self._temporal_spec(kind),
+            "ln2": rmsnorm_spec(),
+            "mlp": mlp_spec(True),
+        }
+
+    def init(self, key, dtype=jnp.float32):
+        cfg = self.cfg
+        keys = jax.random.split(key, 2 + 3 * self.reps + len(self.tail))
+        params = {
+            "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+            "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        }
+        reptrees = []
+        for r in range(self.reps):
+            reptrees.append([
+                self._block_init(keys[2 + 3 * r + s], _PATTERN[s], dtype)
+                for s in range(3)
+            ])
+        if self.reps:
+            params["group0"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *reptrees)
+        for ti, kind in enumerate(self.tail):
+            params[f"tail{ti}"] = self._block_init(
+                keys[2 + 3 * self.reps + ti], kind, dtype)
+        return params
+
+    def param_logical(self):
+        spec = {"embed": embed_spec(), "ln_f": rmsnorm_spec()}
+        if self.reps:
+            slots = [self._block_spec(_PATTERN[s]) for s in range(3)]
+            spec["group0"] = jax.tree.map(
+                lambda t: (None,) + t, slots,
+                is_leaf=lambda t: isinstance(t, tuple))
+        for ti, kind in enumerate(self.tail):
+            spec[f"tail{ti}"] = self._block_spec(kind)
+        return spec
+
+    # ------------------------------------------------------- recurrence ----
+
+    def _rglru(self, p, xw, h0=None):
+        """RG-LRU over xw (B, L, w); returns (y, h_last)."""
+        r = jax.nn.sigmoid(dense(p["gate_a"], xw))
+        i = jax.nn.sigmoid(dense(p["gate_i"], xw))
+        log_a = (8.0 * r
+                 * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+                 ).astype(jnp.float32)  # c = 8 (Griffin)
+        a = jnp.exp(log_a).astype(xw.dtype)
+        gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)
+                         ).astype(xw.dtype) * (i * xw)
+        if h0 is not None:
+            gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        _, h = jax.lax.associative_scan(comb, (a, gated), axis=1)
+        return h, h[:, -1]
+
+    def _temporal_fwd(self, p, kind, x):
+        cfg = self.cfg
+        if kind == "attn":
+            out, _ = gqa_attention(p["attn"], cfg, x, window=cfg.window)
+            return out
+        B, L, d = x.shape
+        x = shard(x, "batch", None, "embed")
+        xw = shard(dense(p["in_x"], x), "batch", None, "ff")
+        yw = shard(jax.nn.gelu(dense(p["in_y"], x)), "batch", None, "ff")
+        w = p["conv_w"].astype(x.dtype)
+        pad = jnp.pad(xw, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
+        xw = sum(w[i] * pad[:, i:i + L] for i in range(cfg.conv_width))
+        xw = xw + p["conv_b"].astype(x.dtype)
+        h, _ = self._rglru(p, xw)
+        return dense(p["out"], h * yw)
+
+    def _block_fwd(self, p, kind, x):
+        x = x + self._temporal_fwd(p["temporal"], kind,
+                                   rmsnorm(p["ln1"], x))
+        x = x + mlp_gelu(p["mlp"], rmsnorm(p["ln2"], x))
+        return shard(x, "batch", "seq", "embed")
+
+    def forward(self, params, tokens, *, remat: bool = True):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed"]["e"].astype(dt)[tokens]
+        if cfg.emb_scale:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, dt))
+        x = shard(x, "batch", "seq", "embed")
+
+        if self.reps:
+            def body(x, rep_p):
+                for s in range(3):
+                    x = self._block_fwd(rep_p[s], _PATTERN[s], x)
+                return x, None
+
+            f = jax.checkpoint(body, prevent_cse=False) if remat else body
+            x, _ = jax.lax.scan(f, x, params["group0"])
+        for ti, kind in enumerate(self.tail):
+            x = self._block_fwd(params[f"tail{ti}"], kind, x)
+        x = rmsnorm(params["ln_f"], x)
+        x = shard(x, "batch", None, "embed")
+        return x @ params["embed"]["e"].astype(dt).T
+
+    # ---------------------------------------------------------- decode ----
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32):
+        cfg = self.cfg
+        W = min(cfg.window or max_len, max_len)
+        reps = self.reps
+
+        def rec_state():
+            return {
+                "h": jnp.zeros((reps, batch, self.lru), dtype),
+                "conv": jnp.zeros((reps, batch, cfg.conv_width - 1,
+                                   self.lru), dtype),
+            }
+
+        cache = {
+            "idx": jnp.zeros((), jnp.int32),
+            "rec0": rec_state(),
+            "rec1": rec_state(),
+            "attn": {  # ring buffer, window-sized (see gqa_decode)
+                "k": jnp.zeros((reps, batch, W, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((reps, batch, W, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+            },
+        }
+        for ti, kind in enumerate(self.tail):
+            if kind == "rec":
+                cache[f"tail{ti}"] = {
+                    "h": jnp.zeros((batch, self.lru), dtype),
+                    "conv": jnp.zeros((batch, cfg.conv_width - 1, self.lru),
+                                      dtype),
+                }
+        return cache
+
+    def cache_logical(self):
+        rec = {"h": (None, "batch", "ff"),
+               "conv": (None, "batch", None, "ff")}
+        spec = {
+            "idx": (),
+            "rec0": dict(rec),
+            "rec1": dict(rec),
+            "attn": {"k": (None, "batch", "seq", "kv_heads", None),
+                     "v": (None, "batch", "seq", "kv_heads", None)},
+        }
+        for ti, kind in enumerate(self.tail):
+            if kind == "rec":
+                spec[f"tail{ti}"] = {"h": ("batch", "ff"),
+                                     "conv": ("batch", None, "ff")}
+        return spec
+
+    def _rec_step(self, p, x, state):
+        """Single-token recurrent block; x (B, 1, d)."""
+        xw = dense(p["in_x"], x)
+        yw = jax.nn.gelu(dense(p["in_y"], x))
+        hist = jnp.concatenate([state["conv"], xw], axis=1)
+        w = p["conv_w"].astype(x.dtype)
+        xw = jnp.einsum("wd,bwd->bd", w, hist)[:, None] \
+            + p["conv_b"].astype(x.dtype)
+        h, h_last = self._rglru(p, xw, h0=state["h"])
+        out = dense(p["out"], h * yw)
+        return out, {"h": h_last, "conv": hist[:, 1:]}
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        idx = cache["idx"]
+        x = params["embed"]["e"].astype(dt)[tokens]
+        if cfg.emb_scale:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, dt))
+        new_cache = {"idx": idx + 1}
+
+        if self.reps:
+            def body(x, xs):
+                rep_p, r0, r1, ac = xs
+                new = []
+                # slot 0, 1: recurrent
+                for s, st in ((0, r0), (1, r1)):
+                    p = rep_p[s]
+                    h = rmsnorm(p["ln1"], x)
+                    out, st_new = self._rec_step(p["temporal"], h, st)
+                    x = x + out
+                    x = x + mlp_gelu(p["mlp"], rmsnorm(p["ln2"], x))
+                    new.append(st_new)
+                # slot 2: local attention
+                p = rep_p[2]
+                h = rmsnorm(p["ln1"], x)
+                a, kc, vc = gqa_decode(p["temporal"]["attn"], cfg, h,
+                                       ac["k"], ac["v"], idx,
+                                       window=cfg.window)
+                x = x + a
+                x = x + mlp_gelu(p["mlp"], rmsnorm(p["ln2"], x))
+                return x, (new[0], new[1], {"k": kc, "v": vc})
+
+            x, (r0, r1, ac) = jax.lax.scan(
+                body, x, (params["group0"], cache["rec0"], cache["rec1"],
+                          cache["attn"]))
+            new_cache.update({"rec0": r0, "rec1": r1, "attn": ac})
+        for ti, kind in enumerate(self.tail):
+            p = params[f"tail{ti}"]
+            h = rmsnorm(p["ln1"], x)
+            out, st = self._rec_step(p["temporal"], h, cache[f"tail{ti}"])
+            x = x + out
+            x = x + mlp_gelu(p["mlp"], rmsnorm(p["ln2"], x))
+            new_cache[f"tail{ti}"] = st
+        x = rmsnorm(params["ln_f"], x)
+        return x @ params["embed"]["e"].astype(dt).T, new_cache

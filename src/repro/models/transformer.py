@@ -1,0 +1,322 @@
+"""Decoder-only transformer covering the dense / MoE / MLA / windowed
+families (starcoder2, smollm, llama3, gemma3, chameleon, deepseek-v2,
+kimi-k2).
+
+Layer stacking uses **grouped scan**: the layer pattern's repeating unit
+(period ``P``) is unrolled inside the scan body and weights are stacked
+``(n_groups, ...)`` — HLO size stays O(period), compile time stays bounded
+at 126-layer scale, and remat applies per group.  Non-divisible tails are
+handled by a second short scan.
+
+Per-slot layer kinds within a period (from ``ModelConfig``):
+  * ``pattern_global`` slots use full attention (+ ``rope_base_global``);
+    other slots use sliding-window attention when ``cfg.window`` is set.
+  * slots below ``first_dense_layers`` (global layer index) use the dense
+    MLP; all other slots use MoE when ``cfg.n_experts > 0``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .attention import (gqa_attention, gqa_decode, gqa_init, gqa_spec,
+                        init_kv_cache, init_mla_cache, mla_attention,
+                        mla_decode, mla_init, mla_spec)
+from .layers import (dense, dense_init, dense_spec, embed_init, embed_spec,
+                     mlp_gelu, mlp_init, mlp_spec, mlp_swiglu, rmsnorm,
+                     rmsnorm_init, rmsnorm_spec, softcap)
+from .moe import moe_ffn, moe_init, moe_spec
+
+__all__ = ["Transformer"]
+
+
+def _layer_kinds(cfg):
+    """(attn_kind, mlp_kind) per layer index."""
+    kinds = []
+    for i in range(cfg.n_layers):
+        slot = i % cfg.pattern_period
+        attn = "global" if slot in cfg.pattern_global else "local"
+        if cfg.window is None:
+            attn = "global"
+        mlp = "dense"
+        if cfg.n_experts and i >= cfg.first_dense_layers:
+            mlp = "moe"
+        kinds.append((attn, mlp))
+    return kinds
+
+
+def _groups(cfg):
+    """Split layers into (start, count, kinds-per-slot) scan groups.
+
+    Groups are maximal runs where the kind pattern repeats with period
+    ``cfg.pattern_period`` (and MoE/dense membership is uniform per slot).
+    """
+    kinds = _layer_kinds(cfg)
+    P = cfg.pattern_period
+    groups = []
+    i = 0
+    while i < len(kinds):
+        # find the longest run of whole periods with identical slot kinds
+        slot_kinds = tuple(kinds[i:i + P])
+        if len(slot_kinds) < P:
+            groups.append((i, len(kinds) - i, tuple(kinds[i:])))
+            break
+        j = i
+        while (j + P <= len(kinds)
+               and tuple(kinds[j:j + P]) == slot_kinds):
+            j += P
+        groups.append((i, j - i, slot_kinds))
+        i = j
+    return groups
+
+
+class Transformer:
+    """Functional decoder-only LM; see module docstring."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.groups = _groups(cfg)
+
+    # ----------------------------------------------------------- init ----
+
+    def _block_init(self, key, kinds, dtype):
+        cfg = self.cfg
+        attn_kind, mlp_kind = kinds
+        ka, km, k1, k2 = jax.random.split(key, 4)
+        attn = (mla_init(ka, cfg, dtype) if cfg.mla
+                else gqa_init(ka, cfg, dtype))
+        if mlp_kind == "moe":
+            mlp = moe_init(km, cfg, dtype)
+        else:
+            mlp = mlp_init(km, cfg.d_model, cfg.d_ff, cfg.mlp_gated, dtype)
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn,
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp,
+        }
+
+    def _block_spec(self, kinds):
+        cfg = self.cfg
+        attn_kind, mlp_kind = kinds
+        attn = mla_spec(cfg) if cfg.mla else gqa_spec(cfg)
+        mlp = moe_spec(cfg) if mlp_kind == "moe" else mlp_spec(cfg.mlp_gated)
+        return {
+            "ln1": rmsnorm_spec(),
+            "attn": attn,
+            "ln2": rmsnorm_spec(),
+            "mlp": mlp,
+        }
+
+    def init(self, key, dtype=jnp.float32):
+        cfg = self.cfg
+        keys = jax.random.split(key, 2 + len(self.groups))
+        params: Dict[str, Any] = {
+            "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+            "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab,
+                                           dtype)
+        for gi, (start, count, slot_kinds) in enumerate(self.groups):
+            P = len(slot_kinds)
+            reps = count // P
+            gkeys = jax.random.split(keys[2 + gi], reps * P)
+
+            def one_rep(ks):
+                return [self._block_init(ks[s], slot_kinds[s], dtype)
+                        for s in range(P)]
+
+            # stack rep-wise: list over slots of stacked (reps, ...) trees
+            reptrees = [one_rep(gkeys[r * P:(r + 1) * P])
+                        for r in range(reps)]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *reptrees)
+            params[f"group{gi}"] = stacked
+        return params
+
+    def param_logical(self):
+        cfg = self.cfg
+        spec: Dict[str, Any] = {
+            "embed": embed_spec(),
+            "ln_f": rmsnorm_spec(),
+        }
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = dense_spec("embed", "vocab")
+        for gi, (start, count, slot_kinds) in enumerate(self.groups):
+            P = len(slot_kinds)
+            slots = [self._block_spec(slot_kinds[s]) for s in range(P)]
+            # stacked leading axis is the scan (reps) axis: never sharded
+            spec[f"group{gi}"] = jax.tree.map(
+                lambda t: (None,) + t, slots,
+                is_leaf=lambda t: isinstance(t, tuple),
+            )
+        return spec
+
+    # -------------------------------------------------------- forward ----
+
+    def _block_apply(self, p, kinds, x, layer_idx):
+        cfg = self.cfg
+        attn_kind, mlp_kind = kinds
+        h = rmsnorm(p["ln1"], x)
+        if cfg.mla:
+            a, _ = mla_attention(p["attn"], cfg, h)
+        else:
+            window = cfg.window if attn_kind == "local" else None
+            base = (cfg.rope_base_global
+                    if (attn_kind == "global" and cfg.rope_base_global)
+                    else cfg.rope_base)
+            a, _ = gqa_attention(p["attn"], cfg, h, window=window,
+                                 rope_base=base)
+        # seq-shard the partial attention output BEFORE the residual add:
+        # the partial-sum + constraint pair lowers to a reduce-scatter
+        # instead of all-reduce + slice (halves SP collective volume)
+        x = x + shard(a, "batch", "seq", "embed")
+        h = rmsnorm(p["ln2"], x)
+        if mlp_kind == "moe":
+            m = moe_ffn(p["mlp"], cfg, h)
+        elif cfg.mlp_gated:
+            m = mlp_swiglu(p["mlp"], h)
+        else:
+            m = mlp_gelu(p["mlp"], h)
+        x = x + shard(m, "batch", "seq", "embed")
+        return shard(x, "batch", "seq", "embed")
+
+    def forward(self, params, tokens, *, remat: bool = True):
+        """tokens (B, S) int32 -> logits (B, S, vocab)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed"]["e"].astype(dt)[tokens]
+        if cfg.emb_scale:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, dt))
+        x = shard(x, "batch", "seq", "embed")
+
+        for gi, (start, count, slot_kinds) in enumerate(self.groups):
+            stacked = params[f"group{gi}"]  # list over slots, leaves (reps,..)
+
+            def body(x, rep_p, _kinds=slot_kinds, _start=start):
+                for s in range(len(_kinds)):
+                    x = self._block_apply(rep_p[s], _kinds[s], x, _start + s)
+                return x, None
+
+            f = jax.checkpoint(body, prevent_cse=False) if remat else body
+            x, _ = jax.lax.scan(f, x, stacked)
+
+        x = rmsnorm(params["ln_f"], x)
+        x = shard(x, "batch", None, "embed")  # SP: gather seq for lm head
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"]["e"].astype(dt).T
+        else:
+            logits = dense(params["lm_head"], x)
+        logits = softcap(logits, cfg.logit_softcap)
+        return shard(logits, "batch", None, "vocab")
+
+    # ---------------------------------------------------------- decode ----
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        cache = {"idx": jnp.zeros((), jnp.int32)}
+        for gi, (start, count, slot_kinds) in enumerate(self.groups):
+            P = len(slot_kinds)
+            reps = count // P
+            slots = []
+            for s_ in range(P):
+                if cfg.mla:
+                    one = {
+                        "ckv": jnp.zeros((reps, batch, max_len,
+                                          cfg.kv_lora), dtype),
+                        "kr": jnp.zeros((reps, batch, max_len,
+                                         cfg.qk_rope_dim), dtype),
+                    }
+                else:
+                    # sliding-window layers only ever need `window` slots
+                    # (ring buffer; see gqa_decode) — 512x smaller cache
+                    # for gemma3's 29 local layers at 500k tokens
+                    is_local = (slot_kinds[s_][0] == "local"
+                                and cfg.window is not None)
+                    length = min(cfg.window, max_len) if is_local \
+                        else max_len
+                    one = {
+                        "k": jnp.zeros((reps, batch, length,
+                                        cfg.n_kv_heads, cfg.head_dim),
+                                       dtype),
+                        "v": jnp.zeros((reps, batch, length,
+                                        cfg.n_kv_heads, cfg.head_dim),
+                                       dtype),
+                    }
+                slots.append(one)
+            cache[f"group{gi}"] = slots
+        return cache
+
+    def cache_logical(self):
+        cfg = self.cfg
+        spec = {"idx": ()}
+        for gi, (start, count, slot_kinds) in enumerate(self.groups):
+            P = len(slot_kinds)
+            if cfg.mla:
+                one = {"ckv": (None, "batch", "seq", None),
+                       "kr": (None, "batch", "seq", None)}
+            else:
+                one = {"k": (None, "batch", "seq", "kv_heads", None),
+                       "v": (None, "batch", "seq", "kv_heads", None)}
+            spec[f"group{gi}"] = [dict(one) for _ in range(P)]
+        return spec
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B, 1) -> (logits (B, 1, vocab), new cache)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        idx = cache["idx"]
+        x = params["embed"]["e"].astype(dt)[tokens]
+        if cfg.emb_scale:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, dt))
+        new_cache = {"idx": idx + 1}
+
+        for gi, (start, count, slot_kinds) in enumerate(self.groups):
+            stacked = params[f"group{gi}"]
+            gcache = cache[f"group{gi}"]
+
+            def body(x, xs, _kinds=slot_kinds):
+                rep_p, rep_c = xs
+                new_c = []
+                for s in range(len(_kinds)):
+                    p, c = rep_p[s], rep_c[s]
+                    h = rmsnorm(p["ln1"], x)
+                    if cfg.mla:
+                        a, ckv, kr = mla_decode(p["attn"], cfg, h,
+                                                c["ckv"], c["kr"], idx)
+                        new_c.append({"ckv": ckv, "kr": kr})
+                    else:
+                        attn_kind = _kinds[s][0]
+                        window = cfg.window if attn_kind == "local" else None
+                        base = (cfg.rope_base_global
+                                if (attn_kind == "global"
+                                    and cfg.rope_base_global)
+                                else cfg.rope_base)
+                        a, kc, vc = gqa_decode(p["attn"], cfg, h, c["k"],
+                                               c["v"], idx, window=window,
+                                               rope_base=base)
+                        new_c.append({"k": kc, "v": vc})
+                    x = x + a
+                    h = rmsnorm(p["ln2"], x)
+                    if _kinds[s][1] == "moe":
+                        m = moe_ffn(p["mlp"], cfg, h)
+                    elif cfg.mlp_gated:
+                        m = mlp_swiglu(p["mlp"], h)
+                    else:
+                        m = mlp_gelu(p["mlp"], h)
+                    x = x + m
+                return x, new_c
+
+            x, new_gc = jax.lax.scan(body, x, (stacked, gcache))
+            new_cache[f"group{gi}"] = new_gc
+
+        x = rmsnorm(params["ln_f"], x)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"]["e"].astype(dt).T
+        else:
+            logits = dense(params["lm_head"], x)
+        return softcap(logits, cfg.logit_softcap), new_cache

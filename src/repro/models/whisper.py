@@ -1,0 +1,247 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings ``(B, frames, d_model)`` that feed
+the (bidirectional) encoder directly.  The decoder is a standard causal
+transformer with cross-attention; positions are sinusoidal (encoder) and
+learned (decoder) — no RoPE, so the paper's rotation technique reaches
+this arch only via the SOAP-Givens optimizer (see DESIGN.md).
+
+Decode: the encoder runs once (prefill), cross-attention K/V are
+precomputed per layer and cached alongside the causal self-attention
+cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .attention import attn_mask, gqa_decode, gqa_init, gqa_spec, _sdpa, \
+    _proj_qkv
+from .layers import (dense, dense_init, dense_spec, embed_init, embed_spec,
+                     layernorm, layernorm_init, layernorm_spec, mlp_gelu,
+                     mlp_init, mlp_spec)
+
+__all__ = ["WhisperBackbone"]
+
+
+def _sinusoid(length: int, d: int, dtype):
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1).astype(dtype)
+
+
+class WhisperBackbone:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ----------------------------------------------------------- init ----
+
+    def _xattn_init(self, key, dtype):
+        cfg = self.cfg
+        d, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+        ks = jax.random.split(key, 4)
+        return {
+            "wq": dense_init(ks[0], d, H * Dh, dtype),
+            "wk": dense_init(ks[1], d, H * Dh, dtype),
+            "wv": dense_init(ks[2], d, H * Dh, dtype),
+            "wo": dense_init(ks[3], H * Dh, d, dtype),
+        }
+
+    def _xattn_spec(self):
+        return {
+            "wq": dense_spec("embed", "heads"),
+            "wk": dense_spec("embed", "heads"),
+            "wv": dense_spec("embed", "heads"),
+            "wo": dense_spec("heads", "embed"),
+        }
+
+    def _enc_block_init(self, key, dtype):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": layernorm_init(cfg.d_model, dtype),
+            "attn": gqa_init(k1, cfg, dtype),
+            "ln2": layernorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, False, dtype),
+        }
+
+    def _dec_block_init(self, key, dtype):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": layernorm_init(cfg.d_model, dtype),
+            "attn": gqa_init(k1, cfg, dtype),
+            "lnx": layernorm_init(cfg.d_model, dtype),
+            "xattn": self._xattn_init(k2, dtype),
+            "ln2": layernorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, False, dtype),
+        }
+
+    def _enc_block_spec(self):
+        return {"ln1": layernorm_spec(), "attn": gqa_spec(self.cfg),
+                "ln2": layernorm_spec(), "mlp": mlp_spec(False)}
+
+    def _dec_block_spec(self):
+        return {"ln1": layernorm_spec(), "attn": gqa_spec(self.cfg),
+                "lnx": layernorm_spec(), "xattn": self._xattn_spec(),
+                "ln2": layernorm_spec(), "mlp": mlp_spec(False)}
+
+    def init(self, key, dtype=jnp.float32):
+        cfg = self.cfg
+        kE, kD, k1, k2, k3 = jax.random.split(key, 5)
+        enc = [self._enc_block_init(k, dtype)
+               for k in jax.random.split(kE, cfg.enc_layers)]
+        dec = [self._dec_block_init(k, dtype)
+               for k in jax.random.split(kD, cfg.dec_layers)]
+        return {
+            "embed": embed_init(k1, cfg.vocab, cfg.d_model, dtype),
+            "pos_dec": jax.random.normal(
+                k2, (cfg.dec_len, cfg.d_model), dtype) * 0.01,
+            "ln_enc": layernorm_init(cfg.d_model, dtype),
+            "ln_dec": layernorm_init(cfg.d_model, dtype),
+            "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+            "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        }
+
+    def param_logical(self):
+        stack = lambda t: jax.tree.map(
+            lambda l: (None,) + l, t, is_leaf=lambda l: isinstance(l, tuple))
+        return {
+            "embed": embed_spec(),
+            "pos_dec": ("seq", "embed"),
+            "ln_enc": layernorm_spec(),
+            "ln_dec": layernorm_spec(),
+            "enc": stack(self._enc_block_spec()),
+            "dec": stack(self._dec_block_spec()),
+        }
+
+    # -------------------------------------------------------- forward ----
+
+    def encode(self, params, frames, *, remat: bool = True):
+        """frames (B, S_enc, d_model) — stub frontend output."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = frames.astype(dt) + _sinusoid(frames.shape[1], cfg.d_model, dt)
+        x = shard(x, "batch", "seq", "embed")
+
+        def body(x, bp):
+            h = layernorm(bp["ln1"], x)
+            B, S, _ = h.shape
+            q, k, v = _proj_qkv(bp["attn"], cfg, h, {"pos": jnp.arange(S)})
+            a = _sdpa(q, k, v, None, cfg.head_dim ** -0.5,
+                      causal=False)  # bidirectional
+            x = x + dense(bp["attn"]["wo"], a)
+            x = x + mlp_gelu(bp["mlp"], layernorm(bp["ln2"], x))
+            return shard(x, "batch", "seq", "embed"), None
+
+        f = jax.checkpoint(body, prevent_cse=False) if remat else body
+        x, _ = jax.lax.scan(f, x, params["enc"])
+        return layernorm(params["ln_enc"], x)
+
+    def _dec_block(self, bp, x, enc_out, idx=None, cache=None):
+        cfg = self.cfg
+        B = x.shape[0]
+        h = layernorm(bp["ln1"], x)
+        if cache is None:
+            S = h.shape[1]
+            q, k, v = _proj_qkv(bp["attn"], cfg, h, {"pos": jnp.arange(S)})
+            a = _sdpa(q, k, v, attn_mask(S, S), cfg.head_dim ** -0.5)
+            a = dense(bp["attn"]["wo"], a)
+            kc = vc = None
+        else:
+            a, kc, vc = gqa_decode(bp["attn"], cfg, h, cache["k"],
+                                   cache["v"], idx)
+        x = x + a
+        # cross attention
+        h = layernorm(bp["lnx"], x)
+        H, Dh = cfg.n_heads, cfg.head_dim
+        q = dense(bp["xattn"]["wq"], h).reshape(B, -1, H, Dh)
+        if cache is None or "xk" not in cache:
+            xk = dense(bp["xattn"]["wk"], enc_out).reshape(
+                B, -1, H, Dh)
+            xv = dense(bp["xattn"]["wv"], enc_out).reshape(
+                B, -1, H, Dh)
+        else:
+            xk, xv = cache["xk"].astype(x.dtype), cache["xv"].astype(x.dtype)
+        a = _sdpa(q, xk, xv, None, Dh ** -0.5, causal=False)
+        x = x + dense(bp["xattn"]["wo"], a)
+        x = x + mlp_gelu(bp["mlp"], layernorm(bp["ln2"], x))
+        return x, (kc, vc)
+
+    def forward(self, params, frames, dec_tokens, *, remat: bool = True):
+        """Teacher-forced: returns decoder logits (B, S_dec, vocab)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        enc_out = self.encode(params, frames, remat=remat)
+        S = dec_tokens.shape[1]
+        x = params["embed"]["e"].astype(dt)[dec_tokens] \
+            + params["pos_dec"].astype(dt)[:S]
+
+        def body(x, bp):
+            x, _ = self._dec_block(bp, x, enc_out)
+            return shard(x, "batch", "seq", "embed"), None
+
+        f = jax.checkpoint(body, prevent_cse=False) if remat else body
+        x, _ = jax.lax.scan(f, x, params["dec"])
+        x = layernorm(params["ln_dec"], x)
+        return x @ params["embed"]["e"].astype(dt).T
+
+    # ---------------------------------------------------------- decode ----
+
+    def init_cache(self, params, frames, max_len: int, dtype=jnp.float32):
+        """Prefill: run encoder, precompute per-layer cross K/V."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames, remat=False)
+        B = frames.shape[0]
+        H, Dh = cfg.n_heads, cfg.head_dim
+
+        def xkv(bp):
+            xk = dense(bp["xattn"]["wk"], enc_out).reshape(B, -1, H, Dh)
+            xv = dense(bp["xattn"]["wv"], enc_out).reshape(B, -1, H, Dh)
+            return xk.astype(dtype), xv.astype(dtype)
+
+        xks, xvs = jax.lax.map(xkv, params["dec"])
+        return {
+            "idx": jnp.zeros((), jnp.int32),
+            "k": jnp.zeros((cfg.dec_layers, B, max_len, cfg.n_kv_heads,
+                            Dh), dtype),
+            "v": jnp.zeros((cfg.dec_layers, B, max_len, cfg.n_kv_heads,
+                            Dh), dtype),
+            "xk": xks,
+            "xv": xvs,
+        }
+
+    def cache_logical(self):
+        return {
+            "idx": (),
+            "k": (None, "batch", "seq", "kv_heads", None),
+            "v": (None, "batch", "seq", "kv_heads", None),
+            "xk": (None, "batch", "seq", "heads", None),
+            "xv": (None, "batch", "seq", "heads", None),
+        }
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        idx = cache["idx"]
+        x = params["embed"]["e"].astype(dt)[tokens] \
+            + params["pos_dec"].astype(dt)[idx][None, None]
+
+        def body(x, xs):
+            bp, k, v, xk, xv = xs
+            x, (kc, vc) = self._dec_block(
+                bp, x, None, idx=idx,
+                cache={"k": k, "v": v, "xk": xk, "xv": xv})
+            return x, (kc, vc)
+
+        x, (kc, vc) = jax.lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"], cache["xk"],
+                      cache["xv"]))
+        x = layernorm(params["ln_dec"], x)
+        logits = x @ params["embed"]["e"].astype(dt).T
+        return logits, {**cache, "idx": idx + 1, "k": kc, "v": vc}

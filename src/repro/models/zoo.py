@@ -1,0 +1,22 @@
+"""Model zoo: build any assigned architecture from its config."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+from .mamba2 import Mamba2
+from .rglru import RecurrentHybrid
+from .transformer import Transformer
+from .whisper import WhisperBackbone
+
+__all__ = ["build_model"]
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return Mamba2(cfg)
+    if cfg.family == "hybrid":
+        return RecurrentHybrid(cfg)
+    if cfg.family == "audio":
+        return WhisperBackbone(cfg)
+    # dense / moe / vlm share the decoder-only transformer
+    return Transformer(cfg)

@@ -1,0 +1,143 @@
+"""AdamW with optional 8-bit state quantization and global-norm clipping.
+
+Functional optimizer interface (no optax dependency):
+  ``opt.init(params) -> state``;
+  ``opt.update(grads, state, params) -> (new_params, new_state)``.
+
+8-bit mode stores ``m``/``v`` as int8 with per-block (256) fp32 scales —
+the distributed-optimization trick that brings the 1T-param kimi-k2
+optimizer state from 8 to ~2.06 bytes/param so it fits 16 GB/chip at 512
+chips (see DESIGN.md SS6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "Quantized", "quantize_q8", "dequantize_q8"]
+
+_BLOCK = 256
+
+
+class Quantized(NamedTuple):
+    q: jax.Array       # int8 payload, original shape
+    scale: jax.Array   # fp32 per-block scales, shape (*lead, nblocks)
+
+
+def quantize_q8(x) -> Quantized:
+    """Blockwise int8 along the LAST axis only: leading axes keep their
+    shape — and hence their sharding.  (A flatten-then-block formulation
+    would force GSPMD to replicate the full fp32 tensor: 1.6 TB/device on
+    llama3-405b.)"""
+    lead, last = x.shape[:-1], x.shape[-1] if x.ndim else 1
+    xr = x.reshape(lead + (last,)) if x.ndim else x.reshape(1)
+    pad = (-last) % _BLOCK
+    xb = jnp.pad(xr, [(0, 0)] * len(lead) + [(0, pad)])
+    xb = xb.reshape(lead + (-1, _BLOCK))
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+    q = q.astype(jnp.int8).reshape(lead + (last + pad,))[..., :last]
+    return Quantized(q.reshape(x.shape), scale.astype(jnp.float32))
+
+
+def dequantize_q8(qv: Quantized, shape):
+    lead, last = shape[:-1], shape[-1] if len(shape) else 1
+    pad = (-last) % _BLOCK
+    xb = jnp.pad(qv.q.reshape(lead + (last,)).astype(jnp.float32),
+                 [(0, 0)] * len(lead) + [(0, pad)])
+    xb = xb.reshape(lead + (-1, _BLOCK)) * qv.scale[..., None]
+    return xb.reshape(lead + (last + pad,))[..., :last].reshape(shape)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    quantized: bool = False      # int8 m/v states
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def init(self, params):
+        def zeros_like_state(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            return quantize_q8(z) if self.quantized else z
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros_like_state, params),
+            "v": jax.tree.map(zeros_like_state, params),
+        }
+
+    def update(self, grads, state, params, *, grad_scale: float = 1.0):
+        step = state["step"] + 1
+        if self.clip_norm:
+            gnorm = grad_scale * jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = grad_scale * jnp.minimum(
+                1.0, self.clip_norm / (gnorm + 1e-9))
+        else:
+            gnorm = jnp.zeros(())
+            scale = grad_scale
+        lr = self._lr(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            if self.quantized:
+                m_f = dequantize_q8(m, g.shape)
+                v_f = dequantize_q8(v, g.shape)
+            else:
+                m_f, v_f = m, v
+            m_f = self.b1 * m_f + (1 - self.b1) * g
+            v_f = self.b2 * v_f + (1 - self.b2) * jnp.square(g)
+            u = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + self.eps)
+            if self.quantized:
+                # quantization can zero tiny v blocks -> unbounded u;
+                # Adafactor-style RMS update clipping restores stability
+                rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+                u = u / jnp.maximum(1.0, rms)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            if self.quantized:
+                return p_new, quantize_q8(m_f), quantize_q8(v_f)
+            return p_new, m_f, v_f
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        is_q = lambda t: isinstance(t, Quantized)
+        flat_m = jax.tree.flatten(state["m"], is_leaf=is_q)[0]
+        flat_v = jax.tree.flatten(state["v"], is_leaf=is_q)[0]
+        def upd_leaf(g, m, v, p):
+            # layer-stacked q8 leaves: scan the update over the stack axis
+            # so only one layer's dequant/update/requant temporaries are
+            # live at a time (the whole-leaf chain keeps ~10 fp32 copies
+            # of a 1.6 GiB buffer alive on llama3-405b).  Blockwise-last-
+            # axis quantization commutes with leading-axis slicing, so the
+            # scanned result is byte-identical to the whole-leaf update.
+            if (self.quantized and p.ndim >= 3 and p.shape[0] > 1
+                    and p.size >= 2 ** 24):
+                def body(_, xs):
+                    return None, upd(*xs)
+
+                _, res = jax.lax.scan(body, None, (g, m, v, p))
+                return res
+            return upd(g, m, v, p)
+
+        out = [upd_leaf(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        new_state = {"step": step, "m": new_m, "v": new_v}
+        return new_p, new_state, {"grad_norm": gnorm}

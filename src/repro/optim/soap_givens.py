@@ -1,0 +1,121 @@
+"""SOAP-Givens: Shampoo/SOAP-style preconditioning whose eigenbases are
+maintained by the *rotation-sequence Jacobi solver* (``core.jacobi``).
+
+For each 2D parameter ``W`` (d_in, d_out) we track Kronecker covariance
+factors ``L = E[G G^T]`` and ``R = E[G^T G]`` (dims capped at
+``max_dim``).  Every ``update_freq`` steps the eigenbases of ``L`` and
+``R`` are refreshed by round-robin Jacobi — whose pivots are recorded as
+a rotation/reflector sequence and *applied with the paper's optimized
+kernels* (``jacobi_apply_basis``).  Between refreshes, gradients are
+rotated into the eigenbasis, Adam runs there, and updates rotate back:
+
+    G~ = Q_L^T G Q_R ;  Adam(G~) ;  U = Q_L U~ Q_R^T
+
+This makes ``rot_sequence`` application a *training-time* hot spot for
+every architecture, including attention-free ones (the paper technique's
+arch-independent integration point; DESIGN.md SS3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jacobi import jacobi_apply_basis, jacobi_eigh
+
+__all__ = ["SoapGivens"]
+
+
+def _eligible(p) -> bool:
+    return p.ndim == 2 and min(p.shape) >= 4
+
+
+@dataclass(frozen=True)
+class SoapGivens:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    shampoo_beta: float = 0.95
+    update_freq: int = 10          # Jacobi basis refresh period
+    jacobi_cycles: int = 4
+    max_dim: int = 512             # cap covariance side (block to identity)
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def init(self, params):
+        def one(p):
+            st = {
+                "m": jnp.zeros(p.shape, jnp.float32),
+                "v": jnp.zeros(p.shape, jnp.float32),
+            }
+            if _eligible(p) and max(p.shape) <= self.max_dim:
+                st["L"] = jnp.eye(p.shape[0], dtype=jnp.float32) * 1e-6
+                st["R"] = jnp.eye(p.shape[1], dtype=jnp.float32) * 1e-6
+                st["QL"] = jnp.eye(p.shape[0], dtype=jnp.float32)
+                st["QR"] = jnp.eye(p.shape[1], dtype=jnp.float32)
+            return st
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "per": jax.tree.map(one, params,
+                                is_leaf=lambda x: hasattr(x, "ndim")),
+        }
+
+    def update(self, grads, state, params, *, grad_scale: float = 1.0):
+        step = state["step"] + 1
+        lr = self._lr(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+        refresh = (step % self.update_freq) == 0
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32) * grad_scale
+            precond = "L" in st
+            if precond:
+                L = self.shampoo_beta * st["L"] \
+                    + (1 - self.shampoo_beta) * (g @ g.T)
+                R = self.shampoo_beta * st["R"] \
+                    + (1 - self.shampoo_beta) * (g.T @ g)
+
+                def do_refresh(_):
+                    # Jacobi on the covariances; basis applied via the
+                    # paper's rotation-sequence machinery
+                    resL = jacobi_eigh(L, cycles=self.jacobi_cycles)
+                    resR = jacobi_eigh(R, cycles=self.jacobi_cycles)
+                    QL = jacobi_apply_basis(resL, method="accumulated")
+                    QR = jacobi_apply_basis(resR, method="accumulated")
+                    return QL, QR
+
+                QL, QR = jax.lax.cond(
+                    refresh, do_refresh,
+                    lambda _: (st["QL"], st["QR"]), None)
+                g_rot = QL.T @ g @ QR
+            else:
+                QL = QR = None
+                L = R = None
+                g_rot = g
+
+            m = self.b1 * st["m"] + (1 - self.b1) * g_rot
+            v = self.b2 * st["v"] + (1 - self.b2) * jnp.square(g_rot)
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            if precond:
+                u = QL @ u @ QR.T
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            new_st = {"m": m, "v": v}
+            if precond:
+                new_st.update({"L": L, "R": R, "QL": QL, "QR": QR})
+            return p_new, new_st
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["per"])
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_per = treedef.unflatten([o[1] for o in out])
+        return new_p, {"step": step, "per": new_per}, {}

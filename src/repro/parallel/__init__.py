@@ -1,0 +1,5 @@
+from .sharding import (AxisRules, DEFAULT_RULES, axis_rules, current_rules,
+                       logical_to_spec, param_spec, shard)
+
+__all__ = ["AxisRules", "DEFAULT_RULES", "axis_rules", "current_rules",
+           "logical_to_spec", "param_spec", "shard"]

@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules (Megatron TP + ZeRO-3 FSDP + EP).
+
+Model code annotates activations and parameters with *logical* axis names;
+this module resolves them to mesh ``PartitionSpec``s via the active
+``AxisRules``.  Outside a rules context every annotation is a no-op, so
+the same model code runs single-device smoke tests and 512-chip dry-runs.
+
+Default production rules:
+
+  batch   -> ("pod", "data")        activations data-parallel
+  heads / kv_heads / ff / vocab / experts -> "model"   tensor/expert parallel
+  fsdp    -> parameters additionally shard their largest non-TP axis over
+             ("pod", "data")  (ZeRO-3); optimizer state inherits
+
+Sequence parallelism ("seq" -> "model") is an opt-in rule used by the
+perf hillclimb.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AxisRules", "axis_rules", "current_rules", "shard",
+           "logical_to_spec", "param_spec", "DEFAULT_RULES"]
+
+_state = threading.local()
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """logical name -> mesh axis (or tuple of axes, or None)."""
+    rules: Dict[str, object] = field(default_factory=dict)
+    fsdp_axes: Tuple[str, ...] = ()     # axes used to shard params (ZeRO)
+    mesh_shape: Dict[str, int] = field(default_factory=dict)
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+
+DEFAULT_RULES = AxisRules(
+    rules={
+        "batch": ("pod", "data"),
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "seq": None,
+        "embed": None,
+    },
+    fsdp_axes=("pod", "data"),
+)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules], mesh=None):
+    prev = getattr(_state, "rules", None)
+    prev_mesh = getattr(_state, "mesh", None)
+    _state.rules = rules
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = prev
+        _state.mesh = prev_mesh
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def _dedup(spec_axes, shape=None, rules=None):
+    """Drop mesh axes already used earlier in the spec (GSPMD requirement)
+    and, when ``shape`` is known, axes that do not divide the dimension."""
+    used = set()
+    out = []
+    for i, a in enumerate(spec_axes):
+        if a is None:
+            out.append(None)
+            continue
+        axes = a if isinstance(a, tuple) else (a,)
+        axes = tuple(x for x in axes if x not in used)
+        if shape is not None and rules is not None:
+            kept = []
+            size = 1
+            for x in axes:
+                nx = rules.mesh_shape.get(x, 1)
+                if shape[i] % (size * nx) == 0:
+                    kept.append(x)
+                    size *= nx
+            axes = tuple(kept)
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return out
+
+
+def logical_to_spec(logical: Tuple[Optional[str], ...],
+                    rules: Optional[AxisRules] = None,
+                    shape: Optional[Tuple[int, ...]] = None) -> P:
+    rules = rules or current_rules()
+    if rules is None:
+        return P()
+    return P(*_dedup([rules.resolve(l) for l in logical], shape, rules))
+
+
+def shard(x, *logical: Optional[str]):
+    """Annotate an activation with logical axes (no-op without rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(logical, rules, shape=tuple(x.shape))
+    mesh = current_mesh()
+    if mesh is not None:
+        spec = jax.sharding.NamedSharding(mesh, spec)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def param_spec(shape: Tuple[int, ...],
+               logical: Tuple[Optional[str], ...],
+               rules: Optional[AxisRules] = None) -> P:
+    """PartitionSpec for a parameter: TP axes from rules + FSDP on the
+    largest remaining dimension (ZeRO-3)."""
+    rules = rules or current_rules()
+    if rules is None:
+        return P()
+    resolved = [rules.resolve(l) for l in logical]
+    # drop TP axes that do not divide their dimension first
+    resolved = _dedup(resolved, shape, rules)
+    if rules.fsdp_axes:
+        used = set()
+        for r in resolved:
+            used.update(r if isinstance(r, tuple) else (r,))
+        free = [i for i, r in enumerate(resolved) if r is None]
+        if free:
+            # largest free dim that divides the fsdp axis product
+            fsdp_size = int(np.prod([rules.mesh_shape.get(a, 1)
+                                     for a in rules.fsdp_axes])) or 1
+            cand = sorted(free, key=lambda i: -shape[i])
+            for i in cand:
+                if shape[i] % max(fsdp_size, 1) == 0:
+                    resolved[i] = tuple(
+                        a for a in rules.fsdp_axes if a not in used)
+                    break
+    return P(*_dedup(resolved))

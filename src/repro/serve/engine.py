@@ -1,0 +1,70 @@
+"""Batched serving engine: continuous-batching-lite.
+
+Requests (prompt token lists) are admitted into a fixed-size batch of
+decode slots; each slot tracks its own cache index via per-slot masking.
+Prefill is teacher-forced through ``forward`` (cheap on CPU smoke scale);
+decode steps are jitted one-token steps over the whole batch.  Greedy
+sampling by default.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeEngine"]
+
+
+@dataclass
+class _Slot:
+    tokens: List[int]
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, cfg, params, *, batch: int, max_len: int,
+                 eos: Optional[int] = None):
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.eos = eos
+        self._step = jax.jit(model.decode_step)
+
+    def generate(self, prompts: List[List[int]], max_new: int = 16):
+        """Greedy-decode a batch of prompts (padded to the slot batch)."""
+        assert len(prompts) <= self.batch
+        slots = [_Slot(list(p)) for p in prompts]
+        while len(slots) < self.batch:
+            slots.append(_Slot([0], done=True))
+
+        cache = self.model.init_cache(self.batch, self.max_len,
+                                      dtype=jnp.float32)
+        max_prompt = max(len(s.tokens) for s in slots)
+        # teacher-forced prefill through the decode path (slot-uniform)
+        last = np.zeros((self.batch, 1), np.int32)
+        for t in range(max_prompt + max_new):
+            for i, s in enumerate(slots):
+                if t < len(s.tokens):
+                    last[i, 0] = s.tokens[t]
+            logits, cache = self._step(self.params, cache,
+                                       jnp.asarray(last))
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for i, s in enumerate(slots):
+                if s.done:
+                    continue
+                if t >= len(s.tokens) - 1:
+                    tok = int(nxt[i])
+                    s.out.append(tok)
+                    last[i, 0] = tok
+                    if (self.eos is not None and tok == self.eos) \
+                            or len(s.out) >= max_new:
+                        s.done = True
+            if all(s.done for s in slots):
+                break
+        return [s.out for s in slots[: len(prompts)]]

@@ -1,0 +1,25 @@
+"""Losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_cross_entropy"]
+
+
+def softmax_cross_entropy(logits, labels):
+    """Mean next-token CE + z-loss term (both fp32).
+
+    The label log-prob is picked with an iota/where reduction rather than
+    ``take_along_axis``: a gather along the vocab axis forces GSPMD to
+    all-gather vocab-sharded logits, while the masked reduction stays
+    fully sharded.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_iota == labels[..., None], lf, 0.0),
+                 axis=-1)
+    ce = jnp.mean(lse - ll)
+    z = jnp.mean(jnp.square(lse))
+    return ce, z

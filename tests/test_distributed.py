@@ -1,0 +1,124 @@
+"""Distributed tests run in subprocesses with 8 host devices so the main
+pytest process keeps a single device (the dry-run owns 512)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_row_and_column_sharded_rotseq():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.rotations import random_sequence
+        from repro.core.ref import rot_sequence_numpy
+        from repro.core.distributed import (rot_sequence_row_sharded,
+            rot_sequence_column_sharded_padded)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(5)
+        for (m, n, k, n_b, k_b, method) in [
+                (8, 32, 5, 4, 2, "blocked"), (16, 64, 7, 8, 4, "blocked"),
+                (8, 32, 9, 8, 3, "accumulated"),
+                (4, 64, 2, 16, 8, "accumulated")]:
+            A = rng.standard_normal((m, n)).astype(np.float32)
+            seq = random_sequence(jax.random.key(n + k), n, k)
+            ref = rot_sequence_numpy(A, seq.cos, seq.sin)
+            o1 = rot_sequence_row_sharded(jnp.array(A), seq.cos, seq.sin,
+                                          mesh, n_b=n_b, k_b=k_b)
+            o2 = rot_sequence_column_sharded_padded(
+                jnp.array(A), seq.cos, seq.sin, mesh, col_axis="model",
+                n_b=n_b, k_b=k_b, row_axes=("data",), method=method)
+            for o in (o1, o2):
+                err = np.abs(np.asarray(o, np.float64) - ref).max()
+                assert err < 1e-4, (m, n, k, method, err)
+        print("DIST OK")
+    """)
+    assert "DIST OK" in out
+
+
+def test_mini_dryrun_multipod_mesh():
+    """(2,2,2) pod/data/model mini-mesh: lower+compile a reduced arch with
+    the same code path as the production dry-run."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.launch.mesh import make_rules_for_mesh
+        from repro.launch.specs import (abstract_opt_state, input_specs,
+                                        sharding_trees)
+        from repro.models import build_model
+        from repro.optim import AdamW
+        from repro.parallel.sharding import axis_rules
+        from repro.train import make_train_step
+        from repro.configs.base import ShapeConfig
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        cfg = get_config("smollm-135m").reduced()
+        shape = ShapeConfig("mini", 64, 8, "train")
+        rules = make_rules_for_mesh(mesh)
+        model = build_model(cfg)
+        opt = AdamW(lr=1e-4)
+        with axis_rules(rules, mesh=mesh):
+            trees = sharding_trees(model, cfg, shape, opt, rules, mesh)
+            step = make_train_step(model, cfg, opt)
+            jf = jax.jit(step,
+                         in_shardings=(trees["params"], trees["opt"],
+                                       trees["batch"]),
+                         out_shardings=(trees["params"], trees["opt"],
+                                        None))
+            lowered = jf.lower(trees["params_abs"],
+                               abstract_opt_state(opt, trees["params_abs"]),
+                               input_specs(cfg, shape))
+            compiled = lowered.compile()
+        assert compiled.memory_analysis().temp_size_in_bytes > 0
+        txt = compiled.as_text()
+        assert any(c in txt for c in ("all-reduce", "all-gather",
+                                      "reduce-scatter")), "no collectives?"
+        print("MINI DRYRUN OK")
+    """)
+    assert "MINI DRYRUN OK" in out
+
+
+def test_hlo_collectives_accounting():
+    """Collective bytes from the loop-aware analyzer: an all-reduce inside
+    a scan of length L must count L times."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.hlo_analysis import analyze_hlo
+        mesh = jax.make_mesh((8,), ("d",))
+        L, M = 5, 64
+
+        def f(x, ws):
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(body, x, ws)
+            return x
+
+        sh_x = NamedSharding(mesh, P(None, "d"))
+        sh_w = NamedSharding(mesh, P(None, "d", None))
+        jf = jax.jit(f, in_shardings=(sh_x, sh_w),
+                     out_shardings=sh_x)
+        comp = jf.lower(jax.ShapeDtypeStruct((M, M), jnp.float32),
+                        jax.ShapeDtypeStruct((L, M, M), jnp.float32)
+                        ).compile()
+        hc = analyze_hlo(comp.as_text())
+        total_coll = sum(hc.collective_bytes.values())
+        n_coll = sum(hc.collective_counts.values())
+        assert n_coll >= L, (n_coll, hc.collective_counts)
+        assert hc.flops >= L * 2 * M * M * (M // 8) * 0.9
+        print("HLO COLL OK", hc.collective_counts)
+    """)
+    assert "HLO COLL OK" in out

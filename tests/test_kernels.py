@@ -1,0 +1,78 @@
+"""Pallas kernels: interpret=True vs pure-jnp oracles, shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import random_sequence
+from repro.core.ref import rot_sequence_numpy
+from repro.kernels.rope.ops import apply_rope, rope_tables
+from repro.kernels.rotseq.ops import rot_sequence_wave
+from repro.kernels.rotseq.ref import rot_sequence_ref
+from repro.kernels.rotseq_mxu.ops import rot_sequence_mxu
+from repro.kernels.rotseq_mxu.ref import rot_sequence_mxu_ref
+
+SHAPES = [(4, 6, 2, 4, 2, 4), (16, 33, 7, 8, 3, 8), (9, 14, 9, 8, 8, 16),
+          (32, 64, 5, 16, 4, 8), (8, 20, 3, 64, 16, 256)]
+
+
+@pytest.mark.parametrize("m,n,k,n_b,k_b,m_blk", SHAPES)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 5e-5),
+                                       (jnp.bfloat16, 5e-2)])
+def test_wave_kernel_vs_oracle(m, n, k, n_b, k_b, m_blk, dtype, tol):
+    rng = np.random.default_rng(m * n + k)
+    A = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    seq = random_sequence(jax.random.key(k), n, k, dtype=dtype)
+    ref = rot_sequence_numpy(np.asarray(A, np.float64),
+                             np.asarray(seq.cos, np.float64),
+                             np.asarray(seq.sin, np.float64))
+    out = rot_sequence_wave(A, seq.cos, seq.sin, n_b=n_b, k_b=k_b,
+                            m_blk=m_blk)
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               atol=tol * max(1, k), rtol=tol)
+
+
+@pytest.mark.parametrize("m,n,k,n_b,k_b,m_blk", SHAPES)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 5e-5),
+                                       (jnp.bfloat16, 7e-2)])
+def test_mxu_kernel_vs_oracle(m, n, k, n_b, k_b, m_blk, dtype, tol):
+    rng = np.random.default_rng(m + n * k)
+    A = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    seq = random_sequence(jax.random.key(k + 1), n, k, dtype=dtype)
+    ref = rot_sequence_numpy(np.asarray(A, np.float64),
+                             np.asarray(seq.cos, np.float64),
+                             np.asarray(seq.sin, np.float64))
+    out = rot_sequence_mxu(A, seq.cos, seq.sin, n_b=n_b, k_b=k_b,
+                           m_blk=m_blk)
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               atol=tol * max(1, k), rtol=tol)
+
+
+def test_kernels_match_their_refs():
+    """ops vs the ref.py modules shipped beside each kernel."""
+    rng = np.random.default_rng(7)
+    A = jnp.asarray(rng.standard_normal((12, 26)), jnp.float32)
+    seq = random_sequence(jax.random.key(2), 26, 6)
+    r1 = rot_sequence_ref(A, seq.cos, seq.sin, n_b=8, k_b=4)
+    o1 = rot_sequence_wave(A, seq.cos, seq.sin, n_b=8, k_b=4, m_blk=8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(r1), atol=3e-5)
+    r2 = rot_sequence_mxu_ref(A, seq.cos, seq.sin, n_b=8, k_b=4)
+    o2 = rot_sequence_mxu(A, seq.cos, seq.sin, n_b=8, k_b=4, m_blk=8)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(r2), atol=3e-5)
+
+
+@pytest.mark.parametrize("B,S,Hq,Hk,D", [(2, 16, 4, 2, 8), (1, 256, 2, 1, 16),
+                                         (3, 32, 9, 3, 64)])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-6),
+                                       (jnp.bfloat16, 2e-2)])
+def test_rope_kernel_vs_ref(B, S, Hq, Hk, D, dtype, tol):
+    rng = np.random.default_rng(B * S)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, Hk, D)), dtype)
+    cos, sin = rope_tables(jnp.arange(S), D, dtype=dtype)
+    q1, k1 = apply_rope(q, k, cos, sin, use_kernel=False)
+    q2, k2 = apply_rope(q, k, cos, sin, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(q1, np.float32),
+                               np.asarray(q2, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(k1, np.float32),
+                               np.asarray(k2, np.float32), atol=tol)

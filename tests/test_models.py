@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: reduced configs, forward + train step on
+CPU, output shapes + finiteness; decode/forward consistency per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.train import make_train_step
+
+
+def _batch(cfg, B=2, S=16):
+    key = jax.random.key(0)
+    if cfg.is_encdec:
+        D = min(cfg.dec_len, S)
+        return {
+            "frames": jax.random.normal(key, (B, S, cfg.d_model)),
+            "dec_tokens": jax.random.randint(key, (B, D), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (B, D), 0, cfg.vocab),
+        }
+    return {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    batch = _batch(cfg)
+    B = batch["tokens"].shape[0] if "tokens" in batch \
+        else batch["frames"].shape[0]
+
+    if cfg.is_encdec:
+        logits = model.forward(params, batch["frames"],
+                               batch["dec_tokens"], remat=False)
+        S_out = batch["dec_tokens"].shape[1]
+    else:
+        logits = model.forward(params, batch["tokens"], remat=False)
+        S_out = batch["tokens"].shape[1]
+    assert logits.shape == (B, S_out, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(model, cfg, opt, remat=False))
+    st = opt.init(params)
+    p2, st2, metrics = step(params, st, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: non-finite loss"
+    # params changed
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, p2)
+    assert max(jax.tree.leaves(d)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "gemma3-4b",
+                                  "deepseek-v2-lite-16b", "mamba2-370m",
+                                  "recurrentgemma-9b", "whisper-large-v3"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(2))
+    B, S = 2, 12
+    key = jax.random.key(3)
+    if cfg.is_encdec:
+        frames = jax.random.normal(key, (B, 10, cfg.d_model))
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        full = model.forward(params, frames, toks, remat=False)
+        cache = model.init_cache(params, frames, S)
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        full = model.forward(params, toks, remat=False)
+        cache = model.init_cache(B, S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_grouped_scan_matches_unrolled_pattern():
+    """gemma3-style 5:1 pattern: grouped scan == per-layer semantics.
+
+    The grouped representation must place the global-attention layer at
+    slot 5 of every period; verify by checking the groups bookkeeping.
+    """
+    cfg = get_config("gemma3-4b")
+    model = build_model(cfg)
+    kinds = [k for (s, c, sk) in model.groups for k in sk * (c // len(sk))]
+    assert len(kinds) == cfg.n_layers
+    for i, (attn, mlp) in enumerate(kinds):
+        expected = "global" if (i % 6) == 5 else "local"
+        assert attn == expected, (i, attn)
+
+
+def test_param_counts_match_published():
+    targets = {
+        "starcoder2-3b": 3.0e9, "smollm-135m": 1.35e8,
+        "llama3-405b": 4.05e11, "gemma3-4b": 3.9e9,
+        "recurrentgemma-9b": 9.4e9, "chameleon-34b": 3.4e10,
+        "deepseek-v2-lite-16b": 1.57e10, "kimi-k2-1t-a32b": 1.03e12,
+        "mamba2-370m": 3.7e8, "whisper-large-v3": 1.54e9,
+    }
+    for arch, target in targets.items():
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+        assert abs(n - target) / target < 0.08, (arch, n, target)
