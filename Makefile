@@ -1,0 +1,26 @@
+# Tier-1 verification + the compat-shim grep gate.
+#
+# `make check` is the CI entry point: it enforces the repo rule that no
+# version-sensitive JAX attribute lookup (jax.shard_map / jax.typeof /
+# jax.lax.pcast / jax.lax.pvary / pltpu.[TPU]CompilerParams) appears
+# outside src/repro/compat.py, then runs the full test suite.
+
+.PHONY: check test compat-gate smoke bench
+
+check: compat-gate test
+
+test:
+	PYTHONPATH=src python -m pytest -q
+
+compat-gate:
+	@! grep -rnE 'jax\.shard_map|jax\.typeof|jax\.lax\.p(cast|vary)\b|pltpu\.(TPU)?CompilerParams' \
+		--include='*.py' src benchmarks examples tests \
+		| grep -v 'src/repro/compat\.py' \
+		|| { echo 'compat-gate FAILED: version-sensitive JAX attrs outside src/repro/compat.py (see matches above)'; exit 1; }
+	@echo 'compat-gate OK'
+
+smoke:
+	PYTHONPATH=src:. python benchmarks/run.py --only smoke
+
+bench:
+	PYTHONPATH=src:. python benchmarks/run.py

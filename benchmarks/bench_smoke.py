@@ -1,0 +1,34 @@
+"""Registry smoke benchmark: one timed row per registered backend.
+
+Runs a small problem through every backend in the dispatch registry
+(Pallas paths in interpret mode off-TPU), then through ``method="auto"``
+twice — the second call must hit the plan cache.  This is the
+end-to-end liveness row for the dispatch subsystem, not a perf number.
+"""
+from benchmarks.common import (apply_method, emit, flops_of, problem,
+                               registered_methods, select_plan, time_fn)
+from repro.core.registry import plan_cache_stats
+
+M, N, K = 16, 33, 7
+
+
+def run():
+    A, seq = problem(M, N, K)
+    for method in registered_methods():
+        kw = dict(n_b=8, k_b=4)
+        if method.startswith("pallas"):
+            kw.update(m_blk=8, interpret=True)
+        dt = time_fn(lambda: apply_method(A, seq, method, **kw))
+        gf = flops_of(M, N, K) / dt / 1e9
+        emit(f"smoke/{method}", dt, f"{gf:.3f}_Gflops")
+
+    plan = select_plan(M, N, K, dtype=A.dtype)
+    hits0 = plan_cache_stats()["hits"]
+    dt = time_fn(lambda: apply_method(A, seq, "auto"))
+    assert plan_cache_stats()["hits"] > hits0, "auto plan cache missed"
+    emit(f"smoke/auto->{plan.method}", dt,
+         f"nb{plan.n_b}_kb{plan.k_b}_cached")
+
+
+if __name__ == "__main__":
+    run()

@@ -7,9 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import apply_rotation_sequence
+from repro.core.registry import registered_methods, select_plan
 from repro.core.rotations import random_sequence
 
-__all__ = ["time_fn", "emit", "problem", "flops_of"]
+__all__ = ["time_fn", "emit", "problem", "flops_of", "apply_method",
+           "registered_methods", "select_plan"]
 
 
 def problem(m: int, n: int, k: int, seed: int = 0, dtype=jnp.float32):
@@ -38,3 +41,8 @@ def time_fn(fn, *args, reps: int = 3, warmup: int = 1) -> float:
 def emit(name: str, seconds: float, derived: str):
     """CSV row: name,us_per_call,derived."""
     print(f"{name},{seconds*1e6:.1f},{derived}")
+
+
+def apply_method(A, seq, method: str = "auto", **kw):
+    """Benchmark entry point routed through the dispatch registry."""
+    return apply_rotation_sequence(A, seq.cos, seq.sin, method=method, **kw)

@@ -13,11 +13,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_fig5, bench_fig6, bench_fig7, bench_fig8,
-                            bench_iolb, bench_memops)
+                            bench_iolb, bench_memops, bench_smoke)
     suites = {
+        "smoke": bench_smoke,
         "fig5": bench_fig5, "fig6": bench_fig6, "fig7": bench_fig7,
         "fig8": bench_fig8, "memops": bench_memops, "iolb": bench_iolb,
     }
+    if args.only and args.only not in suites:
+        ap.error(f"unknown suite {args.only!r}; one of {sorted(suites)}")
     print("name,us_per_call,derived")
     failed = []
     for name, mod in suites.items():

@@ -1,0 +1,183 @@
+"""JAX version-compatibility shim (single source of truth).
+
+Every version-sensitive JAX attribute lookup in this repo lives here —
+the rule (enforced by ``make check``'s grep gate) is: **no raw
+``jax.shard_map`` / ``jax.typeof`` / ``jax.lax.pcast`` /
+``pltpu.CompilerParams`` outside this module**.
+
+Resolved surfaces, spanning JAX 0.4.x -> 0.5.x+ and nightlies:
+
+* :func:`shard_map` — ``jax.shard_map`` (0.5+) vs
+  ``jax.experimental.shard_map.shard_map`` (0.4.x, with ``check_rep``
+  disabled: the pipelined collectives in ``core.distributed`` are not
+  replication-inferable on the old checker).
+* :func:`varying_axes` / :func:`pvary` / :func:`pvary_like` — the
+  varying-manual-axes ("vma") type system.  Nightlies track which mesh
+  axes a value varies over and require explicit ``pcast``/``pvary`` to
+  make loop-carry types agree; 0.4.x has no such tracking, so the probe
+  returns ``()`` and the cast is the identity.
+* :func:`tpu_compiler_params` — ``pltpu.CompilerParams`` (new name) vs
+  ``pltpu.TPUCompilerParams`` (0.4.x) vs a raw ``mosaic`` params dict
+  (very old releases).
+* :func:`default_platform` / :func:`is_tpu` — backend detection used by
+  the dispatch registry to gate Pallas backends and interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Sequence
+
+import jax
+
+__all__ = [
+    "JAX_VERSION",
+    "MIN_SUPPORTED",
+    "shard_map",
+    "varying_axes",
+    "pvary",
+    "pvary_like",
+    "tpu_compiler_params",
+    "default_platform",
+    "is_tpu",
+    "pallas_interpret_default",
+]
+
+
+def _parse_version(v: str) -> tuple:
+    parts = []
+    for tok in v.split(".")[:3]:
+        num = "".join(ch for ch in tok if ch.isdigit())
+        parts.append(int(num) if num else 0)
+    return tuple(parts)
+
+
+JAX_VERSION: tuple = _parse_version(jax.__version__)
+MIN_SUPPORTED: tuple = (0, 4, 37)
+
+if JAX_VERSION < MIN_SUPPORTED:  # pragma: no cover - old-env guard
+    import warnings
+
+    warnings.warn(
+        f"repro supports JAX >= {'.'.join(map(str, MIN_SUPPORTED))}; "
+        f"found {jax.__version__}. Expect breakage.",
+        stacklevel=2,
+    )
+
+
+# --------------------------------------------------------------------------
+# shard_map
+# --------------------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with a 0.4.x experimental-namespace fallback."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # check_rep=False: the 0.4.x replication checker rejects the manual
+    # ppermute pipelines in core.distributed (same semantics either way).
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+# --------------------------------------------------------------------------
+# varying-manual-axes (vma) probing and casting
+# --------------------------------------------------------------------------
+
+def varying_axes(x: Any) -> tuple:
+    """Mesh axes ``x`` is device-varying over inside ``shard_map``.
+
+    On JAX versions without vma tracking (<= 0.4.x) this is always
+    ``()`` — those versions do not distinguish varying from replicated
+    values in the type system, so no cast is ever needed.
+    """
+    typeof = getattr(jax, "typeof", None)
+    if typeof is None:
+        return ()
+    try:
+        aval = typeof(x)
+    except Exception:
+        return ()
+    return tuple(getattr(aval, "vma", ()) or ())
+
+
+def pvary(x, axes: Sequence[str]):
+    """Cast ``x`` to be device-varying over ``axes`` (identity if n/a)."""
+    axes = tuple(axes)
+    if not axes:
+        return x
+    lax = jax.lax
+    if hasattr(lax, "pcast"):
+        return lax.pcast(x, axes, to="varying")
+    if hasattr(lax, "pvary"):
+        return lax.pvary(x, axes)
+    return x  # no vma type system: replicated values are fine as carries
+
+
+def pvary_like(x, ref: Any, extra: Iterable[str] = ()):
+    """Match ``x``'s varying-axes type to ``ref`` (plus ``extra`` axes).
+
+    The canonical use is making a freshly created constant (identity
+    matrix, zero carry) a legal ``scan``/``fori_loop`` carry alongside
+    device-varying operands inside ``shard_map``.
+    """
+    want = set(varying_axes(ref)) | set(extra)
+    need = tuple(sorted(want - set(varying_axes(x))))
+    return pvary(x, need) if need else x
+
+
+# --------------------------------------------------------------------------
+# Pallas TPU compiler params
+# --------------------------------------------------------------------------
+
+def tpu_compiler_params(**kwargs):
+    """Construct TPU compiler params across the pltpu renames.
+
+    ``pltpu.CompilerParams`` (new) -> ``pltpu.TPUCompilerParams``
+    (0.4.x) -> ``{"mosaic": {...}}`` dict (ancient).  Unknown kwargs are
+    dropped with a warning rather than crashing, so newer tuning knobs
+    degrade gracefully on older compilers.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:  # pragma: no cover - ancient JAX
+        return dict(mosaic=kwargs)
+    fields = getattr(cls, "__dataclass_fields__", None)
+    if fields is not None:
+        unknown = [k for k in kwargs if k not in fields]
+        if unknown:  # pragma: no cover - forward-compat path
+            import warnings
+
+            warnings.warn(
+                f"dropping TPU compiler params unsupported on "
+                f"jax {jax.__version__}: {unknown}", stacklevel=2,
+            )
+            kwargs = {k: v for k, v in kwargs.items() if k in fields}
+    return cls(**kwargs)
+
+
+# --------------------------------------------------------------------------
+# platform detection
+# --------------------------------------------------------------------------
+
+def default_platform() -> str:
+    """Lowercase default backend platform: ``cpu`` / ``gpu`` / ``tpu``."""
+    try:
+        return jax.default_backend().lower()
+    except Exception:  # pragma: no cover - uninitialized backends
+        return "cpu"
+
+
+def is_tpu() -> bool:
+    return default_platform() == "tpu"
+
+
+def pallas_interpret_default() -> bool:
+    """Interpret-mode default for Pallas calls: compiled only on TPU."""
+    return not is_tpu()

@@ -22,6 +22,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from .blocked import _band_inputs, apply_tile, num_tiles, pack_sheared
 
 __all__ = [
@@ -42,9 +44,8 @@ def accumulate_tile_factors(Ct, St, Gt, *, dtype=jnp.float32):
     eye = jnp.eye(w, dtype=dtype)
     # inside shard_map the tiles may be device-varying; the identity must
     # carry the same varying-manual-axes type to be a legal loop carry
-    vma = tuple(getattr(jax.typeof(Ct), "vma", ()))
-    if vma:
-        eye = jax.lax.pcast(eye, vma, to="varying")
+    # (no-op on JAX versions without vma tracking — see repro.compat)
+    eye = compat.pvary_like(eye, Ct)
     return jax.vmap(lambda c, s, g: apply_tile(eye, c, s, g))(Ct, St, Gt)
 
 

@@ -1,7 +1,7 @@
 """Public API for rotation-sequence application.
 
-``apply_rotation_sequence(A, C, S, method=...)`` dispatches to all
-implementations; ``method`` one of:
+``apply_rotation_sequence(A, C, S, method=...)`` dispatches through the
+backend **registry** (:mod:`repro.core.registry`); ``method`` one of:
 
   ``unoptimized``   Algorithm 1.2 (paper baseline, jnp)
   ``wavefront``     Algorithm 1.3 (jnp)
@@ -9,42 +9,172 @@ implementations; ``method`` one of:
   ``accumulated``   rs_gemm analogue: tile factors + GEMM sweeps
   ``pallas_wave``   Pallas VPU wavefront kernel (packed layout)
   ``pallas_mxu``    Pallas MXU accumulated kernel
+  ``auto``          registry cost model picks backend + (n_b, k_b, m_blk)
+                    from problem shape/dtype/platform; pass
+                    ``autotune=True`` to measure the top candidates and
+                    cache the fastest plan per (shape, dtype, platform).
+
+Each backend is registered below with a capability record (dtypes,
+platforms, per-entry-sign support, shard_map compatibility, Pallas
+requirements) and a cost model from the paper's SS6 memory-operation
+analysis.  Explicit ``n_b``/``k_b``/``m_blk`` arguments always override
+the planned tiles.
 """
 from __future__ import annotations
+
+from repro.core import registry
+from repro.core.registry import BackendSpec, Capability, select_plan
 
 from .accumulate import rot_sequence_accumulated
 from .blocked import rot_sequence_blocked
 from .ref import rot_sequence_unoptimized, rot_sequence_wavefront
 
-__all__ = ["apply_rotation_sequence", "METHODS"]
+__all__ = ["apply_rotation_sequence", "METHODS", "select_plan"]
 
-METHODS = (
-    "unoptimized", "wavefront", "blocked", "accumulated",
-    "pallas_wave", "pallas_mxu",
-)
 
+# --------------------------------------------------------------------------
+# backend registration
+# --------------------------------------------------------------------------
+
+def _run_unoptimized(A, C, S, *, reflect=False, G=None, **kw):
+    assert G is None, "per-entry signs need a blocked method"
+    return rot_sequence_unoptimized(A, C, S, reflect=reflect)
+
+
+def _run_wavefront(A, C, S, *, reflect=False, G=None, **kw):
+    assert G is None, "per-entry signs need a blocked method"
+    return rot_sequence_wavefront(A, C, S, reflect=reflect)
+
+
+def _run_blocked(A, C, S, *, n_b=64, k_b=16, reflect=False, G=None, **kw):
+    return rot_sequence_blocked(A, C, S, n_b=n_b, k_b=k_b, reflect=reflect,
+                                G=G)
+
+
+def _run_accumulated(A, C, S, *, n_b=64, k_b=16, reflect=False, G=None,
+                     **kw):
+    return rot_sequence_accumulated(A, C, S, n_b=n_b, k_b=k_b,
+                                    reflect=reflect, G=G)
+
+
+def _run_pallas_wave(A, C, S, *, n_b=64, k_b=16, reflect=False, G=None,
+                     **kw):
+    from repro.kernels.rotseq.ops import rot_sequence_wave
+    return rot_sequence_wave(A, C, S, n_b=n_b, k_b=k_b, reflect=reflect,
+                             G=G, **kw)
+
+
+def _run_pallas_mxu(A, C, S, *, n_b=64, k_b=16, reflect=False, G=None,
+                    **kw):
+    from repro.kernels.rotseq_mxu.ops import rot_sequence_mxu
+    return rot_sequence_mxu(A, C, S, n_b=n_b, k_b=k_b, reflect=reflect,
+                            G=G, **kw)
+
+
+registry.register(BackendSpec(
+    name="unoptimized",
+    fn=_run_unoptimized,
+    capability=Capability(supports_signs=False, supports_sharding=True),
+    cost=registry.cost_unoptimized,
+    candidates=registry.no_tiles,
+    doc="Algorithm 1.2 reference: one rotation at a time, no blocking.",
+))
+
+registry.register(BackendSpec(
+    name="wavefront",
+    fn=_run_wavefront,
+    capability=Capability(supports_signs=False, supports_sharding=True),
+    cost=registry.cost_wavefront,
+    candidates=registry.no_tiles,
+    doc="Algorithm 1.3 wavefront order, unblocked.",
+))
+
+registry.register(BackendSpec(
+    name="blocked",
+    fn=_run_blocked,
+    capability=Capability(supports_sharding=True, tile_min=(2, 1)),
+    cost=registry.cost_blocked,
+    candidates=registry.blocked_tiles,
+    doc="Blocked wavefront (paper SS2/SS5), jnp scan over tiles.",
+))
+
+registry.register(BackendSpec(
+    name="accumulated",
+    fn=_run_accumulated,
+    capability=Capability(supports_sharding=True, tile_min=(2, 1)),
+    cost=registry.cost_accumulated,
+    candidates=registry.accumulated_tiles,
+    doc="rs_gemm analogue: accumulate tile factors, sweep as GEMMs.",
+))
+
+registry.register(BackendSpec(
+    name="pallas_wave",
+    fn=_run_pallas_wave,
+    capability=Capability(platforms=("tpu",), tile_min=(2, 1),
+                          needs_pallas=True),
+    cost=registry.cost_pallas_wave,
+    candidates=registry.pallas_wave_tiles,
+    doc="Pallas TPU VPU wavefront kernel (packed layout, VMEM carry).",
+))
+
+registry.register(BackendSpec(
+    name="pallas_mxu",
+    fn=_run_pallas_mxu,
+    capability=Capability(platforms=("tpu",), tile_min=(2, 1),
+                          needs_pallas=True),
+    cost=registry.cost_pallas_mxu,
+    candidates=registry.pallas_mxu_tiles,
+    doc="Pallas TPU MXU accumulated kernel.",
+))
+
+METHODS = registry.registered_methods()
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
 
 def apply_rotation_sequence(A, C, S, *, method: str = "accumulated",
-                            n_b: int = 64, k_b: int = 16,
-                            reflect: bool = False, G=None, **kw):
-    if method == "unoptimized":
-        assert G is None, "per-entry signs need a blocked method"
-        return rot_sequence_unoptimized(A, C, S, reflect=reflect)
-    if method == "wavefront":
-        assert G is None, "per-entry signs need a blocked method"
-        return rot_sequence_wavefront(A, C, S, reflect=reflect)
-    if method == "blocked":
-        return rot_sequence_blocked(A, C, S, n_b=n_b, k_b=k_b,
-                                    reflect=reflect, G=G)
-    if method == "accumulated":
-        return rot_sequence_accumulated(A, C, S, n_b=n_b, k_b=k_b,
-                                        reflect=reflect, G=G)
-    if method == "pallas_wave":
-        from repro.kernels.rotseq.ops import rot_sequence_wave
-        return rot_sequence_wave(A, C, S, n_b=n_b, k_b=k_b,
-                                 reflect=reflect, G=G, **kw)
-    if method == "pallas_mxu":
-        from repro.kernels.rotseq_mxu.ops import rot_sequence_mxu
-        return rot_sequence_mxu(A, C, S, n_b=n_b, k_b=k_b,
-                                reflect=reflect, G=G, **kw)
-    raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+                            n_b: int | None = None, k_b: int | None = None,
+                            reflect: bool = False, G=None,
+                            autotune: bool = False, **kw):
+    """Apply the rotation sequence ``(C, S)`` to ``A`` from the right.
+
+    ``method="auto"`` consults the registry: capability filtering, the
+    SS6 cost model (or measured autotune), and the per-(shape, dtype,
+    platform) plan cache decide the backend and tile sizes.  A named
+    ``method`` keeps the seed behaviour: every tiled backend defaults to
+    ``n_b=64, k_b=16`` unless overridden.
+    """
+    if method == "auto":
+        m, n = A.shape
+        _, k = C.shape
+        if n < 2 or k < 1 or m < 1:
+            return A  # no rotation sites: application is the identity
+        plan = select_plan(m, n, k, dtype=A.dtype,
+                           platform=kw.pop("platform", None),
+                           signs=G is not None,
+                           sharded=kw.pop("sharded", False),
+                           autotune=autotune)
+        planned = plan.kwargs()
+        if n_b is not None:
+            planned["n_b"] = n_b
+        if k_b is not None:
+            planned["k_b"] = k_b
+        planned.update(kw)
+        spec = registry.get_backend(plan.method)
+        return spec.fn(A, C, S, reflect=reflect, G=G, **planned)
+
+    spec = registry.get_backend(method)  # raises ValueError if unknown
+    if G is not None and not spec.capability.supports_signs:
+        raise ValueError(
+            f"method {method!r} does not support per-entry signs (G); "
+            f"use a blocked-family backend"
+        )
+    planned = dict(kw)
+    for planner_kw in ("sharded", "platform"):  # planner-only kwargs
+        planned.pop(planner_kw, None)
+    if spec.candidates is not registry.no_tiles:  # registry: tiled backend
+        planned["n_b"] = 64 if n_b is None else n_b  # seed defaults
+        planned["k_b"] = 16 if k_b is None else k_b
+    return spec.fn(A, C, S, reflect=reflect, G=G, **planned)

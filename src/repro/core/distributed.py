@@ -35,8 +35,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from .accumulate import accumulate_tile_factors
-from .blocked import apply_tile, pack_sheared, rot_sequence_blocked
+from .blocked import apply_tile, pack_sheared
 
 __all__ = [
     "rot_sequence_row_sharded",
@@ -46,17 +48,31 @@ __all__ = [
 
 
 def rot_sequence_row_sharded(A, C, S, mesh, *, row_axes=("data",),
-                             n_b: int = 64, k_b: int = 16,
+                             n_b: int | None = None, k_b: int | None = None,
                              method: str = "blocked"):
-    """Row-sharded application: zero communication (paper SS7)."""
-    from .accumulate import rot_sequence_accumulated
+    """Row-sharded application: zero communication (paper SS7).
 
-    fn = {
-        "blocked": partial(rot_sequence_blocked, n_b=n_b, k_b=k_b),
-        "accumulated": partial(rot_sequence_accumulated, n_b=n_b, k_b=k_b),
-    }[method]
+    ``method`` may be any registry backend whose capability record marks
+    it shard_map-compatible (``supports_sharding``), or ``"auto"``.
+    With ``"auto"``, ``sharded=True`` restricts the planner to shard_map
+    -capable backends and the plan picks tiles; explicit ``n_b``/``k_b``
+    override the plan (named methods default to the seed 64/16).
+    """
+    from .api import apply_rotation_sequence
+    from .registry import get_backend
 
-    local = jax.shard_map(
+    tile_kw = {key: val for key, val in (("n_b", n_b), ("k_b", k_b))
+               if val is not None}
+    if method == "auto":
+        fn = partial(apply_rotation_sequence, method="auto", sharded=True,
+                     **tile_kw)
+    else:
+        if not get_backend(method).capability.supports_sharding:
+            raise ValueError(f"method {method!r} cannot run inside shard_map")
+        fn = partial(apply_rotation_sequence, method=method,
+                     **{"n_b": 64, "k_b": 16, **tile_kw})
+
+    local = compat.shard_map(
         lambda a, c, s: fn(a, c, s),
         mesh=mesh,
         in_specs=(P(row_axes, None), P(None, None), P(None, None)),
@@ -204,16 +220,16 @@ def rot_sequence_column_sharded(A, C, S, mesh, *, col_axis: str = "model",
 
         carry0 = jnp.zeros((m_loc, k_b), A_loc.dtype)
         # match the varying-manual-axes type of the slab (plus the pipe
-        # axis the ppermute varies over) so the fori carry types agree
-        want = set(getattr(jax.typeof(A_loc), "vma", ())) | {col_axis}
-        carry0 = jax.lax.pcast(carry0, tuple(sorted(want)), to="varying")
+        # axis the ppermute varies over) so the fori carry types agree;
+        # identity on JAX versions without vma tracking (repro.compat)
+        carry0 = compat.pvary_like(carry0, A_loc, extra=(col_axis,))
         A_fin, _ = jax.lax.fori_loop(
             0, B + D_ - 1, superstep, (A_loc, carry0)
         )
         return A_fin
 
     row_spec = row_axes if row_axes else None
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         device_fn,
         mesh=mesh,
         in_specs=(P(row_spec, col_axis), P(None, None), P(None, None)),

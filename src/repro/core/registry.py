@@ -1,0 +1,418 @@
+"""Backend registry + cost-model dispatch for rotation-sequence application.
+
+Each backend (``unoptimized``, ``wavefront``, ``blocked``, ``accumulated``,
+``pallas_wave``, ``pallas_mxu``) registers a :class:`BackendSpec`:
+
+* a **capability record** — supported dtypes, platforms, per-entry sign
+  (``G``) support, shard_map compatibility, tile-shape bounds, and whether
+  the backend needs Pallas (and tolerates interpret mode);
+* a **cost model** derived from the paper's memory-operation analysis
+  (SS6): estimated seconds = max(flop term, memory-traffic term) against
+  the platform's peak rates, with the paper's per-variant memop counts
+  (4mnk unblocked, 2mnk wavefront, 2mn.ceil(k/k_b) blocked/accumulated)
+  and the accumulated path's 4/3-flop GEMM trade priced at MXU rate;
+* a **tile candidate generator** — the ``(n_b, k_b, m_blk)`` grid the
+  selector searches for a given problem.
+
+``select_plan`` ranks eligible backends x tile candidates by modeled cost
+(optionally re-ranked by *measured* wall time when ``autotune=True``) and
+caches the winning :class:`Plan` per ``(shape, dtype, platform, signs)``.
+The hardware table :data:`PLATFORMS` is the single source of peak numbers,
+shared with ``launch.roofline``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro import compat
+
+__all__ = [
+    "Hardware", "PLATFORMS", "Problem", "Plan", "Capability", "BackendSpec",
+    "register", "get_backend", "registered_methods", "eligible_backends",
+    "no_tiles", "blocked_tiles", "accumulated_tiles",
+    "pallas_wave_tiles", "pallas_mxu_tiles",
+    "select_plan", "plan_cache_stats", "clear_plan_cache",
+]
+
+
+# hardware table lives in the jax-free repro.hw (shared with the
+# roofline report); re-exported here for registry users
+from repro.hw import Hardware, PLATFORMS  # noqa: E402
+
+# Pallas interpret mode executes the kernel body op-by-op on the host —
+# orders of magnitude off compiled speed.  Off-TPU the pallas backends
+# remain *eligible* (interpret_ok) but carry this penalty, so "auto"
+# never picks them while explicit method="pallas_*" still works.
+_INTERPRET_PENALTY = 1e3
+
+
+# --------------------------------------------------------------------------
+# problem / plan records
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """Shape/dtype/platform key of one application ``A (m,n) <- k waves``."""
+    m: int
+    n: int
+    k: int
+    dtype: str = "float32"
+    platform: str = "cpu"
+    signs: bool = False    # needs per-entry G support
+    sharded: bool = False  # must be traceable inside shard_map
+
+    @property
+    def itemsize(self) -> int:
+        return {"float64": 8, "float32": 4, "bfloat16": 2,
+                "float16": 2}.get(self.dtype, 4)
+
+    @property
+    def hardware(self) -> Hardware:
+        return PLATFORMS.get(self.platform, PLATFORMS["cpu"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A dispatch decision: backend + tile parameters (+ model cost)."""
+    method: str
+    n_b: Optional[int] = None
+    k_b: Optional[int] = None
+    m_blk: Optional[int] = None
+    est_seconds: float = float("inf")
+    source: str = "model"  # "model" | "measured" | "cache"
+
+    def kwargs(self) -> dict:
+        kw = {}
+        if self.n_b is not None:
+            kw["n_b"] = self.n_b
+        if self.k_b is not None:
+            kw["k_b"] = self.k_b
+        if self.m_blk is not None:
+            kw["m_blk"] = self.m_blk
+        return kw
+
+
+@dataclasses.dataclass(frozen=True)
+class Capability:
+    """What a backend can run; consulted before costing it."""
+    dtypes: Tuple[str, ...] = ("float32", "bfloat16", "float64", "float16")
+    platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
+    supports_signs: bool = True       # per-entry G (mixed rot/reflector)
+    supports_sharding: bool = False   # callable inside shard_map
+    tile_min: Tuple[int, int] = (1, 1)
+    tile_max: Tuple[int, int] = (4096, 4096)
+    needs_pallas: bool = False
+    interpret_ok: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    fn: Callable                       # (A, C, S, *, reflect, G, **plan_kw)
+    capability: Capability
+    cost: Callable[[Problem, Plan], float]
+    candidates: Callable[[Problem], List[Plan]]
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+
+def register(spec: BackendSpec) -> BackendSpec:
+    """Register (or replace) a backend spec under ``spec.name``."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; one of {registered_methods()} "
+            f"(or 'auto' via apply_rotation_sequence)"
+        ) from None
+
+
+def registered_methods() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def eligible_backends(problem: Problem) -> List[BackendSpec]:
+    """Backends whose capability record admits ``problem``."""
+    out = []
+    for spec in _REGISTRY.values():
+        cap = spec.capability
+        if problem.dtype not in cap.dtypes:
+            continue
+        if problem.platform not in cap.platforms:
+            # Pallas backends stay *eligible* off-platform when they can
+            # run under the interpreter, but their cost carries the
+            # interpret penalty so "auto" never actually picks them.
+            if not (cap.needs_pallas and cap.interpret_ok):
+                continue
+        if problem.signs and not cap.supports_signs:
+            continue
+        if problem.sharded and not cap.supports_sharding:
+            continue
+        out.append(spec)
+    return out
+
+
+# --------------------------------------------------------------------------
+# cost models (paper SS6 memory-operation analysis)
+# --------------------------------------------------------------------------
+
+def _bands(k: int, k_b: int) -> int:
+    return max(1, math.ceil(k / max(1, k_b)))
+
+
+# latency floor keeps tiny problems from reading as free
+_LATENCY_FLOOR = 2e-6
+
+
+def _roofline_seconds(flop_term: float, byte_term: float) -> float:
+    return max(flop_term, byte_term, _LATENCY_FLOOR)
+
+
+def cost_unoptimized(p: Problem, plan: Plan) -> float:
+    """Alg 1.2: 4 memops per rotation, no reuse (paper SS6 baseline)."""
+    hw = p.hardware
+    flops = 6.0 * p.m * p.n * p.k
+    memops = 4.0 * p.m * p.n * p.k * p.itemsize
+    return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+
+
+def cost_wavefront(p: Problem, plan: Plan) -> float:
+    """Alg 1.3: wavefront fuses column touches to ~2 memops/rotation."""
+    hw = p.hardware
+    flops = 6.0 * p.m * p.n * p.k
+    memops = 2.0 * p.m * p.n * p.k * p.itemsize
+    return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+
+
+def cost_blocked(p: Problem, plan: Plan) -> float:
+    """Blocked wavefront: A streams once per band of k_b waves (SS5)."""
+    hw = p.hardware
+    k_b = plan.k_b or 16
+    flops = 6.0 * p.m * p.n * p.k
+    memops = 2.0 * p.m * p.n * p.itemsize * _bands(p.k, k_b)
+    return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+
+
+def _accumulated_flops(p: Problem, n_b: int, k_b: int) -> Tuple[float, float]:
+    """(MXU flops, VPU accumulation flops) for the rs_gemm formulation."""
+    w = n_b + k_b
+    bands = _bands(p.k, k_b)
+    tiles = max(1, math.ceil((p.n + k_b - 1) / n_b))
+    sweep = bands * tiles * 2.0 * p.m * w * w           # (m,w) @ (w,w)
+    accum = bands * tiles * 6.0 * w * n_b * k_b          # Q_t = I rotated
+    return sweep, accum
+
+
+def cost_accumulated(p: Problem, plan: Plan) -> float:
+    """rs_gemm: ~4/3 extra flops (n_b = k_b) priced at matmul rate."""
+    hw = p.hardware
+    n_b = plan.n_b or 128
+    k_b = plan.k_b or 128
+    sweep, accum = _accumulated_flops(p, n_b, k_b)
+    flop_term = sweep / hw.mxu_flops + accum / hw.vpu_flops
+    memops = 2.0 * p.m * p.n * p.itemsize * _bands(p.k, k_b)
+    return _roofline_seconds(flop_term, memops / hw.hbm_bw)
+
+
+def _interpret_factor(p: Problem) -> float:
+    return 1.0 if p.platform == "tpu" else _INTERPRET_PENALTY
+
+
+def cost_pallas_wave(p: Problem, plan: Plan) -> float:
+    """VPU kernel: blocked-wavefront traffic, carry pinned in VMEM."""
+    return max(0.7 * cost_blocked(p, plan) * _interpret_factor(p),
+               _LATENCY_FLOOR)
+
+
+def cost_pallas_mxu(p: Problem, plan: Plan) -> float:
+    """MXU kernel: accumulated-path traffic at kernel-fused constants."""
+    return max(0.7 * cost_accumulated(p, plan) * _interpret_factor(p),
+               _LATENCY_FLOOR)
+
+
+# --------------------------------------------------------------------------
+# tile candidate grids
+# --------------------------------------------------------------------------
+
+def _clip_pairs(p: Problem, pairs, cap: Capability) -> List[Tuple[int, int]]:
+    lo_n, lo_k = cap.tile_min
+    hi_n, hi_k = cap.tile_max
+    seen, out = set(), []
+    for n_b, k_b in pairs:
+        n_b = max(lo_n, min(n_b, hi_n, max(8, p.n)))
+        k_b = max(lo_k, min(k_b, hi_k, max(1, p.k)))
+        if (n_b, k_b) not in seen:
+            seen.add((n_b, k_b))
+            out.append((n_b, k_b))
+    return out
+
+
+def no_tiles(p: Problem) -> List[Plan]:
+    return [Plan(method="", n_b=None, k_b=None)]
+
+
+def blocked_tiles(p: Problem) -> List[Plan]:
+    pairs = [(64, 16), (32, 8), (16, 8), (8, 4), (64, 2)]
+    cap = get_backend("blocked").capability
+    return [Plan("", n_b=a, k_b=b) for a, b in _clip_pairs(p, pairs, cap)]
+
+
+def accumulated_tiles(p: Problem) -> List[Plan]:
+    pairs = [(128, 128), (96, 96), (64, 64), (32, 32), (16, 16), (8, 8),
+             (64, 16)]
+    cap = get_backend("accumulated").capability
+    return [Plan("", n_b=a, k_b=b) for a, b in _clip_pairs(p, pairs, cap)]
+
+
+def _m_blk_for(p: Problem) -> int:
+    if p.platform == "tpu":
+        return 256 if p.m >= 256 else 128
+    return min(256, max(8, 1 << (max(1, p.m) - 1).bit_length()))
+
+
+def pallas_wave_tiles(p: Problem) -> List[Plan]:
+    cap = get_backend("pallas_wave").capability
+    pairs = _clip_pairs(p, [(64, 16), (32, 8), (8, 4)], cap)
+    mb = _m_blk_for(p)
+    return [Plan("", n_b=a, k_b=b, m_blk=mb) for a, b in pairs]
+
+
+def pallas_mxu_tiles(p: Problem) -> List[Plan]:
+    cap = get_backend("pallas_mxu").capability
+    pairs = _clip_pairs(p, [(128, 128), (64, 64), (8, 8)], cap)
+    mb = _m_blk_for(p)
+    return [Plan("", n_b=a, k_b=b, m_blk=mb) for a, b in pairs]
+
+
+# --------------------------------------------------------------------------
+# plan selection + cache
+# --------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[tuple, Plan] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict:
+    return dict(_CACHE_STATS, size=len(_PLAN_CACHE))
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def _modeled_plans(problem: Problem) -> List[Plan]:
+    """All eligible (backend, tile) plans, costed and sorted ascending."""
+    plans: List[Plan] = []
+    for spec in eligible_backends(problem):
+        for cand in spec.candidates(problem):
+            plan = dataclasses.replace(cand, method=spec.name)
+            cost = spec.cost(problem, plan)
+            plans.append(dataclasses.replace(plan, est_seconds=cost))
+    plans.sort(key=lambda pl: pl.est_seconds)
+    return plans
+
+
+def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
+    """Median wall-time of one real application at ``plan``'s tiles.
+
+    The synthetic workload matches the problem record: a per-entry sign
+    array is included when ``problem.signs`` so sign-carrying plans are
+    timed on the code path they will actually serve.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    dt = jnp.dtype(problem.dtype)
+    A = jnp.asarray(rng.standard_normal((problem.m, problem.n)), dt)
+    th = rng.standard_normal((problem.n - 1, problem.k))
+    C = jnp.asarray(np.cos(th), dt)
+    S = jnp.asarray(np.sin(th), dt)
+    G = None
+    if problem.signs:
+        G = jnp.asarray(
+            np.where(rng.random((problem.n - 1, problem.k)) < 0.5,
+                     1.0, -1.0), dt)
+    spec = get_backend(plan.method)
+    fn = lambda: spec.fn(A, C, S, reflect=False, G=G, **plan.kwargs())
+    jax.block_until_ready(fn())  # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def select_plan(m: int, n: int, k: int, *, dtype="float32",
+                platform: Optional[str] = None, signs: bool = False,
+                sharded: bool = False, autotune: bool = False,
+                autotune_top: int = 3) -> Plan:
+    """Pick ``(method, n_b, k_b, m_blk)`` for a problem, with caching.
+
+    Cost-model ranking by default; with ``autotune=True`` the top
+    ``autotune_top`` modeled plans are measured end-to-end and the
+    fastest wins.  Winning plans are cached per
+    ``(m, n, k, dtype, platform, signs, sharded)`` — an autotuned
+    (measured) entry overwrites a model-ranked one for the same key and
+    is then reused by plain ``method="auto"`` calls too.
+    """
+    import jax.numpy as jnp
+
+    platform = platform or compat.default_platform()
+    dtype = str(jnp.dtype(dtype))
+    # Measurements time THIS host's default backend; for any other
+    # platform (or a shard_map sub-problem, which can't be reproduced
+    # standalone) fall back to model ranking rather than cache bogus
+    # numbers — and then accept a cached model-ranked entry, since a
+    # measured one can never exist for this key.
+    can_measure = platform == compat.default_platform() and not sharded
+    autotune = autotune and can_measure
+    key = (m, n, k, dtype, platform, signs, sharded)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None and (not autotune or cached.source == "measured"):
+        _CACHE_STATS["hits"] += 1
+        return cached
+    _CACHE_STATS["misses"] += 1
+
+    if n < 2 or k < 1 or m < 1:
+        # degenerate: zero rotations (or empty A) — application is a
+        # no-op; pick the cheapest backend that accepts the arguments
+        best = Plan(method="blocked" if signs else "unoptimized",
+                    est_seconds=0.0)
+        _PLAN_CACHE[key] = best
+        return best
+
+    problem = Problem(m=m, n=n, k=k, dtype=dtype, platform=platform,
+                      signs=signs, sharded=sharded)
+    plans = _modeled_plans(problem)
+    if not plans:
+        raise ValueError(
+            f"no registered backend is eligible for {problem}"
+        )
+    best = plans[0]
+    if autotune:
+        timed = []
+        for plan in plans[:max(1, autotune_top)]:
+            try:
+                secs = _measure_plan(problem, plan)
+            except Exception:  # backend crashed at these tiles: skip it
+                continue
+            timed.append(dataclasses.replace(
+                plan, est_seconds=secs, source="measured"))
+        if timed:
+            best = min(timed, key=lambda pl: pl.est_seconds)
+    _PLAN_CACHE[key] = best
+    return best

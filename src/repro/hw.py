@@ -1,0 +1,33 @@
+"""Per-chip hardware peak rates (jax-free; importable by report tools).
+
+The single source of truth for platform peaks, shared by the dispatch
+registry's cost model (``repro.core.registry``) and the offline roofline
+report (``repro.launch.roofline``).  Deliberately dependency-free so
+log-parsing scripts don't pay a JAX import to read four constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+__all__ = ["Hardware", "PLATFORMS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """Per-chip peak rates used by the cost model and the roofline."""
+    name: str
+    mxu_flops: float   # dense-matmul peak FLOP/s
+    vpu_flops: float   # elementwise/VPU peak FLOP/s
+    hbm_bw: float      # main-memory bandwidth B/s
+    link_bw: float     # interconnect B/s per link
+
+
+PLATFORMS: Dict[str, Hardware] = {
+    "tpu": Hardware("tpu-v5e", mxu_flops=197e12, vpu_flops=4e12,
+                    hbm_bw=819e9, link_bw=50e9),
+    "gpu": Hardware("gpu-a100", mxu_flops=312e12, vpu_flops=19.5e12,
+                    hbm_bw=2.0e12, link_bw=300e9),
+    "cpu": Hardware("cpu-host", mxu_flops=1.5e12, vpu_flops=0.4e12,
+                    hbm_bw=100e9, link_bw=25e9),
+}

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["rotseq_wave_pallas"]
 
 
@@ -110,7 +112,7 @@ def rotseq_wave_pallas(ATfresh, Ct, St, Gt, init, *, n_b: int, k_b: int,
         out_specs=pl.BlockSpec((n_b, m_blk), lambda i, t: (t, i)),
         out_shape=jax.ShapeDtypeStruct((T * n_b, m), ATfresh.dtype),
         scratch_shapes=[pltpu.VMEM((k_b, m_blk), ATfresh.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

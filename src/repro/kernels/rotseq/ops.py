@@ -12,6 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.blocked import num_tiles, pack_sheared
 
 from .kernel import rotseq_wave_pallas
@@ -29,13 +30,16 @@ def _round_up(x: int, mult: int) -> int:
 )
 def rot_sequence_wave(A, C, S, *, n_b: int = 64, k_b: int = 16,
                       m_blk: int = 256, reflect: bool = False, G=None,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """Apply the rotation sequence ``(C, S)`` to ``A`` from the right.
 
     Drop-in equivalent of ``repro.core.ref.rot_sequence_numpy`` computed by
     the Pallas wavefront kernel.  ``m_blk`` is clamped/padded so any ``m``
-    works; on hardware use multiples of 128.
+    works; on hardware use multiples of 128.  ``interpret=None`` resolves
+    via the compat shim: compiled on TPU, interpreter elsewhere.
     """
+    if interpret is None:
+        interpret = compat.pallas_interpret_default()
     m, n = A.shape
     J, k = C.shape
     assert J == n - 1, (C.shape, A.shape)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["rotseq_mxu_pallas"]
 
 
@@ -78,7 +80,7 @@ def rotseq_mxu_pallas(fresh, Q, init, *, n_b: int, k_b: int, m_blk: int,
         out_specs=pl.BlockSpec((m_blk, n_b), lambda i, t: (i, t)),
         out_shape=jax.ShapeDtypeStruct((m, T * n_b), fresh.dtype),
         scratch_shapes=[pltpu.VMEM((m_blk, k_b), fresh.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

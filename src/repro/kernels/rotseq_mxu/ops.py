@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.accumulate import accumulate_tile_factors
 from repro.core.blocked import num_tiles, pack_sheared
 
@@ -24,8 +25,14 @@ def _round_up(x: int, mult: int) -> int:
 )
 def rot_sequence_mxu(A, C, S, *, n_b: int = 128, k_b: int = 128,
                      m_blk: int = 256, reflect: bool = False, G=None,
-                     interpret: bool = True):
-    """Apply ``(C, S)`` to ``A`` from the right via accumulated MXU tiles."""
+                     interpret: bool | None = None):
+    """Apply ``(C, S)`` to ``A`` from the right via accumulated MXU tiles.
+
+    ``interpret=None`` resolves via the compat shim: compiled on TPU,
+    interpreter elsewhere.
+    """
+    if interpret is None:
+        interpret = compat.pallas_interpret_default()
     m, n = A.shape
     J, k = C.shape
     assert J == n - 1

@@ -30,10 +30,15 @@ import glob
 import json
 import os
 
-PEAK_FLOPS = 197e12      # bf16 MXU / chip (v5e)
-VPU_FLOPS = 4e12         # ~elementwise ops/s / chip (8x128 VPU, est.)
-HBM_BW = 819e9           # B/s / chip
-LINK_BW = 50e9           # B/s / link (ICI)
+from repro.hw import PLATFORMS
+
+# per-chip peaks come from the shared hardware table (repro.hw) —
+# the single source of truth shared with the registry's cost model
+_HW = PLATFORMS["tpu"]
+PEAK_FLOPS = _HW.mxu_flops   # bf16 MXU / chip (v5e)
+VPU_FLOPS = _HW.vpu_flops    # ~elementwise ops/s / chip (8x128 VPU, est.)
+HBM_BW = _HW.hbm_bw          # B/s / chip
+LINK_BW = _HW.link_bw        # B/s / link (ICI)
 
 HERE = os.path.dirname(__file__)
 DRYRUN_DIR = os.path.join(HERE, "..", "..", "..", "experiments", "dryrun")

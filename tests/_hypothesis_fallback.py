@@ -1,0 +1,82 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Implements exactly the subset the test-suite uses — ``@given`` with
+keyword ``strategies.integers(lo, hi)`` arguments and
+``@settings(max_examples=..., deadline=...)`` — as seeded-random
+parameter sweeps.  Draws are deterministic per test (seeded by a CRC of
+the test name), so failures reproduce across runs.  With ``hypothesis``
+installed (see ``requirements-dev.txt``) the real library is used
+instead and adds shrinking + adaptive search; this fallback only keeps
+the suite collectable and meaningful without it.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "st"]
+
+_DEFAULT_EXAMPLES = 20
+
+
+@dataclass(frozen=True)
+class _Integers:
+    lo: int
+    hi: int
+
+    def draw(self, rng: np.random.Generator) -> int:
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+
+strategies = st = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Accepts (and mostly ignores) hypothesis settings kwargs."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    """Run the test once per seeded draw of the keyword strategies."""
+    for name, strat in strats.items():
+        if not isinstance(strat, _Integers):
+            raise TypeError(
+                f"fallback strategy for {name!r} must be st.integers(...)"
+            )
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                draw = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **kwargs, **draw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on fallback example "
+                        f"{i + 1}/{n}: {draw}"
+                    ) from e
+
+        # hide the strategy params from pytest's fixture resolution
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
