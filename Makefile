@@ -3,11 +3,14 @@
 # `make check` is the CI entry point: it enforces the repo rule that no
 # version-sensitive JAX attribute lookup (jax.shard_map / jax.typeof /
 # jax.lax.pcast / jax.lax.pvary / pltpu.[TPU]CompilerParams) appears
-# outside src/repro/compat.py, then runs the full test suite.
+# outside src/repro/compat.py (the recursive grep covers every package,
+# src/repro/eig/ included), that the eig subsystem routes all rotation
+# application through the dispatch registry (eig-gate), then runs the
+# full test suite.
 
-.PHONY: check test compat-gate smoke bench
+.PHONY: check test compat-gate eig-gate smoke bench
 
-check: compat-gate test
+check: compat-gate eig-gate test
 
 test:
 	PYTHONPATH=src python -m pytest -q
@@ -18,6 +21,15 @@ compat-gate:
 		| grep -v 'src/repro/compat\.py' \
 		|| { echo 'compat-gate FAILED: version-sensitive JAX attrs outside src/repro/compat.py (see matches above)'; exit 1; }
 	@echo 'compat-gate OK'
+
+# src/repro/eig must dispatch every application through the registry API
+# (apply_rotation_sequence / DelayedRotationBuffer) — never a backend or
+# kernel module directly, or the cost model + plan cache are bypassed.
+eig-gate:
+	@! grep -rnE 'repro\.kernels|core\.(blocked|accumulate|ref)\b|rot_sequence_(blocked|accumulated|unoptimized|wavefront|wave|mxu)' \
+		--include='*.py' src/repro/eig \
+		|| { echo 'eig-gate FAILED: src/repro/eig must go through the dispatch registry (see matches above)'; exit 1; }
+	@echo 'eig-gate OK'
 
 smoke:
 	PYTHONPATH=src:. python benchmarks/run.py --only smoke

@@ -1,0 +1,62 @@
+"""Eigensolver workload: recorded-rotation application throughput.
+
+For each ``n`` this generates the full QR-path recording (staircase
+tridiagonalization waves + one wave per implicit-shift sweep) and a
+round-robin Jacobi recording, then times the *application* of the
+recorded waves to an ``n x n`` basis through ``method="auto"`` — the
+flop-dominant phase of ``eigh_givens`` and the paper's SS5.1 delayed-
+sequence use case.  Derived column: applied rotations per second (only
+non-identity grid entries are counted as rotations).
+
+Generation (host-side scalar recurrences) is kept off the clock and its
+cost bounded: at n=1024 the sweep budget is capped and the timed window
+sliced, so the suite stays interactive on CPU.
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import apply_method, emit, time_fn
+from repro.core import jacobi_eigh
+from repro.core.rotations import RotationSequence
+from repro.eig import tridiag_qr, tridiagonalize
+
+SIZES = (64, 256, 1024)
+_K_TIME = 512  # waves per timed application window
+
+
+def _qr_recording(n: int, rng) -> RotationSequence:
+    X = rng.standard_normal((n, n))
+    tri = tridiagonalize((X + X.T) / 2)
+    max_sweeps = None if n <= 256 else 8  # cap host generation at n=1024
+    qr = tridiag_qr(tri.diag, tri.offdiag, max_sweeps=max_sweeps)
+    C = np.concatenate([tri.cos, qr.cos], axis=1)
+    S = np.concatenate([tri.sin, qr.sin], axis=1)
+    return RotationSequence(jnp.asarray(C, jnp.float32),
+                            jnp.asarray(S, jnp.float32))
+
+
+def _time_apply(tag: str, n: int, seq: RotationSequence, G=None):
+    k = min(seq.k, _K_TIME)
+    C, S = seq.cos[:, :k], seq.sin[:, :k]
+    G = None if G is None else G[:, :k]
+    M = jnp.eye(n, dtype=jnp.float32)
+    sl = RotationSequence(C, S)
+    dt = time_fn(lambda: apply_method(M, sl, "auto", G=G))
+    nrot = int(np.count_nonzero(np.asarray(S)))
+    emit(f"eig/{tag}_n{n}", dt, f"{nrot / dt / 1e6:.2f}_Mrot_s")
+
+
+def run(sizes=SIZES) -> None:
+    for n in sizes:
+        rng = np.random.default_rng(n)
+        _time_apply("qr_apply", n, _qr_recording(n, rng))
+        X = rng.standard_normal((n, n)).astype(np.float32)
+        res = jacobi_eigh(jnp.asarray((X + X.T) / 2),
+                          cycles=2 if n <= 256 else 1)
+        _time_apply("jacobi_apply", n,
+                    RotationSequence(res.cos, res.sin), G=res.sign)
+
+
+if __name__ == "__main__":
+    run()

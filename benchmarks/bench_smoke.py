@@ -29,6 +29,24 @@ def run():
     emit(f"smoke/auto->{plan.method}", dt,
          f"nb{plan.n_b}_kb{plan.k_b}_cached")
 
+    # eigensolver liveness: QR path end-to-end through the delayed buffer
+    import time
+
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.eig import eigh_givens
+
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((16, 16)).astype(np.float32)
+    H = jnp.asarray((X + X.T) / 2)
+    t0 = time.perf_counter()
+    w, V = eigh_givens(H, method="qr", k_delay=8)
+    dt = time.perf_counter() - t0
+    resid = float(jnp.abs(V.T @ H @ V - jnp.diag(w)).max())
+    assert resid < 1e-4, f"eigh_givens residual {resid}"
+    emit("smoke/eigh_qr_n16", dt, f"resid_{resid:.1e}")
+
 
 if __name__ == "__main__":
     run()

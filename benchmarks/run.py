@@ -12,12 +12,14 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_fig5, bench_fig6, bench_fig7, bench_fig8,
-                            bench_iolb, bench_memops, bench_smoke)
+    from benchmarks import (bench_eig, bench_fig5, bench_fig6, bench_fig7,
+                            bench_fig8, bench_iolb, bench_memops,
+                            bench_smoke)
     suites = {
         "smoke": bench_smoke,
         "fig5": bench_fig5, "fig6": bench_fig6, "fig7": bench_fig7,
         "fig8": bench_fig8, "memops": bench_memops, "iolb": bench_iolb,
+        "eig": bench_eig,
     }
     if args.only and args.only not in suites:
         ap.error(f"unknown suite {args.only!r}; one of {sorted(suites)}")

@@ -1,36 +1,55 @@
-"""Eigendecomposition via rotation sequences (the paper's use-case).
+"""Eigendecomposition and SVD via recorded rotation sequences.
 
-Round-robin Jacobi records its pivots as a mixed rotation/reflector
-sequence; the eigenbasis is recovered by applying the *recorded
-sequence* with the optimized appliers — the "delayed sequences of
-rotations" pattern (paper SS5.1) that motivates the whole kernel.
+Exercises the public ``repro.eig`` API: both ``eigh_givens`` methods —
+round-robin Jacobi and implicit-shift tridiagonal QR — record their
+pivots in the paper's ``(n-1, K)`` C/S layout and accumulate the
+eigenbasis by *delayed* application through the registry-dispatched
+appliers (paper SS5.1), then a Golub-Kahan ``svd_givens`` round-trip.
 
     PYTHONPATH=src python examples/jacobi_eig.py
 """
-import jax
+import time
+
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import jacobi_apply_basis, jacobi_eigh
+from repro.eig import eigh_givens, svd_givens
 
 n = 64
 rng = np.random.default_rng(0)
 X = rng.standard_normal((n, n)).astype(np.float32)
 H = jnp.asarray((X + X.T) / 2)
-
-res = jacobi_eigh(H, cycles=8)
-print(f"n={n}: {res.cos.shape[1]} recorded waves, "
-      f"off-diagonal norm {float(res.off_norm):.2e}")
-
-ev = np.sort(np.asarray(res.eigenvalues))
 ref = np.sort(np.linalg.eigvalsh(np.asarray(H, np.float64)))
-print(f"eigenvalue max err vs numpy: {np.abs(ev - ref).max():.2e}")
+scale = np.abs(ref).max()
 
-# delayed application: rotate a tall matrix into the eigenbasis without
-# ever forming V — this is where the optimized appliers earn their keep
-G = jnp.asarray(rng.standard_normal((512, n)), jnp.float32)
-GV = jacobi_apply_basis(res, G, method="accumulated")
-V = jacobi_apply_basis(res, method="accumulated")
-err = float(jnp.abs(GV - G @ V).max())
-print(f"delayed-sequence application err: {err:.2e}")
+print(f"eigh_givens on a random symmetric {n}x{n} (float32):\n")
+print(f"{'method':>8} {'val err':>10} {'|V^T V - I|':>12} "
+      f"{'|V^T H V - L|':>14} {'time':>8}")
+results = {}
+for method in ("jacobi", "qr"):
+    t0 = time.perf_counter()
+    w, V = eigh_givens(H, method=method, k_delay=32)
+    dt = time.perf_counter() - t0
+    Vn = np.asarray(V, np.float64)
+    val_err = np.abs(np.asarray(w) - ref).max() / scale
+    orth = np.abs(Vn.T @ Vn - np.eye(n)).max()
+    resid = np.abs(Vn.T @ np.asarray(H, np.float64) @ Vn
+                   - np.diag(np.asarray(w, np.float64))).max() / scale
+    results[method] = (val_err, orth, resid, dt)
+    print(f"{method:>8} {val_err:>10.2e} {orth:>12.2e} "
+          f"{resid:>14.2e} {dt:>7.2f}s")
+
+assert all(r[0] < 1e-4 and r[2] < 1e-3 for r in results.values())
+
+m, k = 96, 48
+A = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+t0 = time.perf_counter()
+U, s, Vt = svd_givens(A)
+dt = time.perf_counter() - t0
+sr = np.linalg.svd(np.asarray(A, np.float64), compute_uv=False)
+rec = np.abs(np.asarray(U, np.float64) @ np.diag(np.asarray(s, np.float64))
+             @ np.asarray(Vt, np.float64) - np.asarray(A)).max()
+print(f"\nsvd_givens {m}x{k}: sing-val err "
+      f"{np.abs(np.asarray(s) - sr).max() / sr.max():.2e}, "
+      f"reconstruction {rec:.2e}, {dt:.2f}s")
 print("OK")

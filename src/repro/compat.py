@@ -39,6 +39,8 @@ __all__ = [
     "default_platform",
     "is_tpu",
     "pallas_interpret_default",
+    "enable_x64",
+    "x64_enabled",
 ]
 
 
@@ -181,3 +183,37 @@ def is_tpu() -> bool:
 def pallas_interpret_default() -> bool:
     """Interpret-mode default for Pallas calls: compiled only on TPU."""
     return not is_tpu()
+
+
+# --------------------------------------------------------------------------
+# 64-bit mode
+# --------------------------------------------------------------------------
+
+def x64_enabled() -> bool:
+    """Whether jnp currently keeps float64 inputs at 64-bit precision."""
+    return bool(jax.config.read("jax_enable_x64"))
+
+
+def enable_x64(enabled: bool = True):
+    """Context manager scoping 64-bit mode (float64 eigen/SVD paths).
+
+    ``jax.experimental.enable_x64`` where available (all supported
+    versions), else a manual ``jax.config`` toggle with restore.
+    """
+    cm = getattr(__import__("jax.experimental", fromlist=["enable_x64"]),
+                 "enable_x64", None)
+    if cm is not None:
+        return cm(enabled)
+
+    import contextlib  # pragma: no cover - future-proofing fallback
+
+    @contextlib.contextmanager
+    def _toggle():
+        prev = x64_enabled()
+        jax.config.update("jax_enable_x64", enabled)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", prev)
+
+    return _toggle()

@@ -129,6 +129,11 @@ registry.register(BackendSpec(
 
 METHODS = registry.registered_methods()
 
+# persisted (autotuned) plans can only be validated against the registry
+# once every backend above is registered — hence load-here, not on
+# registry import
+registry.load_plan_cache()
+
 
 # --------------------------------------------------------------------------
 # dispatch

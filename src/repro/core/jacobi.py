@@ -132,23 +132,23 @@ def jacobi_eigh(H0, *, cycles: int = 8) -> JacobiResult:
     return JacobiResult(jnp.diagonal(H), C, S, G, off)
 
 
-def jacobi_apply_basis(res: JacobiResult, M=None, *, method="blocked",
-                       n_b: int = 64, k_b: int = 16):
+def jacobi_apply_basis(res: JacobiResult, M=None, *, method="auto",
+                       n_b: int | None = None, k_b: int | None = None,
+                       **kw):
     """Apply the recorded pivot sequence to ``M`` (default: identity).
 
     ``jacobi_apply_basis(res)`` returns the eigenvector matrix ``V``;
     ``jacobi_apply_basis(res, G)`` computes ``G @ V`` without forming ``V``
-    — the paper's "delayed sequence" application, running through the
-    optimized blocked/accumulated/Pallas appliers.
+    — the paper's "delayed sequence" application.  Dispatch goes through
+    the backend registry: the default ``method="auto"`` lets the cost
+    model + plan cache pick the backend and tiles for this shape (the
+    sign-carrying sequence restricts it to the blocked family); a named
+    method keeps the seed defaults ``n_b=64, k_b=16``.
     """
-    from .accumulate import rot_sequence_accumulated
-    from .blocked import rot_sequence_blocked
+    from .api import apply_rotation_sequence
 
     n = res.cos.shape[0] + 1
     if M is None:
         M = jnp.eye(n, dtype=res.cos.dtype)
-    fn = {
-        "blocked": rot_sequence_blocked,
-        "accumulated": rot_sequence_accumulated,
-    }[method]
-    return fn(M, res.cos, res.sin, n_b=n_b, k_b=k_b, G=res.sign)
+    return apply_rotation_sequence(M, res.cos, res.sin, method=method,
+                                   n_b=n_b, k_b=k_b, G=res.sign, **kw)

@@ -17,13 +17,20 @@ Each backend (``unoptimized``, ``wavefront``, ``blocked``, ``accumulated``,
 ``select_plan`` ranks eligible backends x tile candidates by modeled cost
 (optionally re-ranked by *measured* wall time when ``autotune=True``) and
 caches the winning :class:`Plan` per ``(shape, dtype, platform, signs)``.
-The hardware table :data:`PLATFORMS` is the single source of peak numbers,
-shared with ``launch.roofline``.
+Measured plans are additionally *persisted* to disk
+(``~/.cache/repro/plans.json``, override with ``REPRO_PLAN_CACHE``, keyed
+by problem + JAX version; atomic write, loaded when the backend registry
+finishes populating) so autotune cost is paid once per machine, not once
+per process.  The hardware table :data:`PLATFORMS` is the single source
+of peak numbers, shared with ``launch.roofline``.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
+import tempfile
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -35,6 +42,7 @@ __all__ = [
     "no_tiles", "blocked_tiles", "accumulated_tiles",
     "pallas_wave_tiles", "pallas_mxu_tiles",
     "select_plan", "plan_cache_stats", "clear_plan_cache",
+    "plan_cache_path", "save_plan_cache", "load_plan_cache",
 ]
 
 
@@ -307,8 +315,137 @@ def plan_cache_stats() -> dict:
 
 
 def clear_plan_cache() -> None:
+    """Drop the *in-memory* plan cache (the on-disk file is untouched)."""
     _PLAN_CACHE.clear()
     _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+# --------------------------------------------------------------------------
+# persisted plan cache (measured/autotuned plans survive the process)
+# --------------------------------------------------------------------------
+#
+# Autotuned plans are expensive (each one compiles and times real backends)
+# but keyed by pure host facts — (m, n, k, dtype, platform, signs, sharded)
+# plus the JAX version — so they are safe to reuse across processes.  Every
+# measured plan is written through to a JSON file (atomic tmp+rename) and
+# loaded back on import.  Model-ranked plans are cheap to recompute and are
+# never persisted.  ``REPRO_PLAN_CACHE`` overrides the path; setting it to
+# the empty string or ``off`` disables persistence entirely.
+
+_PLAN_CACHE_ENV = "REPRO_PLAN_CACHE"
+_PLAN_CACHE_FORMAT = 1
+_PERSISTED_SOURCES = ("measured", "persisted")
+
+
+def plan_cache_path() -> Optional[str]:
+    """Resolved on-disk cache path, or ``None`` when persistence is off."""
+    override = os.environ.get(_PLAN_CACHE_ENV)
+    if override is not None:
+        if override.strip().lower() in ("", "off", "0", "none"):
+            return None
+        return os.path.expanduser(override)
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro", "plans.json")
+
+
+def _jax_version_str() -> str:
+    return ".".join(map(str, compat.JAX_VERSION))
+
+
+def save_plan_cache(path: Optional[str] = None) -> Optional[str]:
+    """Atomically write all measured/persisted plans to disk.
+
+    Entries already on disk (same format + JAX version) that this
+    process does not hold in memory are merged in before writing — a
+    *best-effort* courtesy to concurrent processes autotuning other
+    shapes (the unlocked read-merge-replace still has a lost-update
+    window; a plan lost to the race is merely re-measured, never
+    corrupted, so no file lock is taken).  Returns the
+    path written, or ``None`` when persistence is disabled or there is
+    nothing durable to save.  Never raises for I/O problems — a
+    read-only cache dir degrades to in-memory planning.
+    """
+    path = path or plan_cache_path()
+    if path is None:
+        return None
+    merged: Dict[tuple, dict] = {}
+    try:
+        with open(path) as f:
+            on_disk = json.load(f)
+        if isinstance(on_disk, dict) \
+                and on_disk.get("format") == _PLAN_CACHE_FORMAT \
+                and on_disk.get("jax") == _jax_version_str():
+            for entry in on_disk.get("plans", []):
+                try:
+                    merged[tuple(entry["key"])] = entry
+                except (KeyError, TypeError):
+                    continue
+    except (OSError, ValueError):
+        pass  # missing/corrupt file: start fresh
+    for key, plan in _PLAN_CACHE.items():
+        if plan.source in _PERSISTED_SOURCES:
+            merged[key] = {"key": list(key), "method": plan.method,
+                           "n_b": plan.n_b, "k_b": plan.k_b,
+                           "m_blk": plan.m_blk,
+                           "est_seconds": plan.est_seconds}
+    if not merged:
+        return None
+    payload = {"format": _PLAN_CACHE_FORMAT, "jax": _jax_version_str(),
+               "plans": list(merged.values())}
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=".plans.", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, path)  # atomic on POSIX
+        except BaseException:
+            os.unlink(tmp)
+            raise
+    except OSError:
+        return None
+    return path
+
+
+def load_plan_cache(path: Optional[str] = None) -> int:
+    """Merge persisted plans into the in-memory cache; returns count loaded.
+
+    Entries from a different JAX version (or an unreadable/corrupt file)
+    are ignored wholesale — measured timings do not transfer across
+    compiler versions.  An in-memory *measured* entry wins over disk.
+    """
+    path = path or plan_cache_path()
+    if path is None:
+        return 0
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return 0
+    if not isinstance(payload, dict) \
+            or payload.get("format") != _PLAN_CACHE_FORMAT \
+            or payload.get("jax") != _jax_version_str():
+        return 0
+    loaded = 0
+    for entry in payload.get("plans", []):
+        try:
+            key = tuple(entry["key"])
+            plan = Plan(method=str(entry["method"]), n_b=entry.get("n_b"),
+                        k_b=entry.get("k_b"), m_blk=entry.get("m_blk"),
+                        est_seconds=float(entry.get("est_seconds", 0.0)),
+                        source="persisted")
+        except (KeyError, TypeError, ValueError):
+            continue
+        if plan.method not in _REGISTRY:
+            continue  # stale entry for an unregistered backend
+        cached = _PLAN_CACHE.get(key)
+        if cached is not None and cached.source == "measured":
+            continue
+        _PLAN_CACHE[key] = plan
+        loaded += 1
+    return loaded
 
 
 def _modeled_plans(problem: Problem) -> List[Plan]:
@@ -382,7 +519,8 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     autotune = autotune and can_measure
     key = (m, n, k, dtype, platform, signs, sharded)
     cached = _PLAN_CACHE.get(key)
-    if cached is not None and (not autotune or cached.source == "measured"):
+    if cached is not None and (not autotune
+                               or cached.source in _PERSISTED_SOURCES):
         _CACHE_STATS["hits"] += 1
         return cached
     _CACHE_STATS["misses"] += 1
@@ -415,4 +553,6 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
         if timed:
             best = min(timed, key=lambda pl: pl.est_seconds)
     _PLAN_CACHE[key] = best
+    if best.source == "measured":
+        save_plan_cache()  # write-through; no-op when persistence is off
     return best

@@ -1,0 +1,28 @@
+"""Eigensolvers and SVD built on recorded rotation sequences.
+
+The paper's killer application (SS5.1): eigenvalue algorithms *generate*
+sequences of planar rotations; accumulating the eigen/singular-vector
+bases means *applying* those sequences to a matrix — exactly the
+operation this library optimizes.  The solvers here (tridiagonal
+Wilkinson-shift QR, Golub-Kahan SVD, plus a wrapper over the round-robin
+Jacobi solver in ``repro.core.jacobi``) record every rotation into the
+paper's ``(n-1, K)`` C/S wave layout and flush them in delayed batches
+through the registry-dispatched appliers.
+
+Public API: :func:`eigh_givens`, :func:`svd_givens`; building blocks:
+:func:`tridiagonalize`, :func:`bidiagonalize`,
+:class:`DelayedRotationBuffer`.
+"""
+from .api import EighResult, SvdResult, eigh_givens, svd_givens
+from .delayed import DelayedRotationBuffer
+from .qr_shift import TridiagQRResult, tridiag_qr
+from .svd import BidiagQRResult, BidiagResult, bidiag_qr, bidiagonalize
+from .tridiag import TridiagResult, tridiag_wave_count, tridiagonalize
+
+__all__ = [
+    "EighResult", "SvdResult", "eigh_givens", "svd_givens",
+    "DelayedRotationBuffer",
+    "TridiagResult", "tridiagonalize", "tridiag_wave_count",
+    "TridiagQRResult", "tridiag_qr",
+    "BidiagResult", "BidiagQRResult", "bidiagonalize", "bidiag_qr",
+]

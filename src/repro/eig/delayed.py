@@ -1,0 +1,136 @@
+"""Delayed application of recorded rotation waves (paper SS5.1).
+
+The eigensolvers in this package *generate* rotations one scalar at a
+time (bulge chasing is inherently sequential) but *apply* them to the
+eigen/singular-vector accumulators in bulk: a
+:class:`DelayedRotationBuffer` holds the accumulator matrix and queues
+recorded waves until ``k_delay`` of them are pending, then flushes the
+whole batch through one registry-dispatched
+``apply_rotation_sequence(method="auto")`` call.  This converts the
+accumulation flops from ``K`` rank-2 column updates into
+``K / k_delay`` blocked/accumulated (or Pallas) applications — the
+paper's "delayed sequences of rotations" use case, and the reason the
+solvers' hot path runs on the optimized kernels.
+
+Partial final batches are padded with identity waves (``c=1, s=0`` is an
+*exact* no-op, the same trick the blocked appliers use for wavefront
+triangles) so every flush presents the same ``(n-1, k_delay)`` problem
+shape — one plan-cache entry per accumulator, planned once (or autotuned
+once, persisting to the on-disk plan cache) and reused for every flush.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["DelayedRotationBuffer"]
+
+
+class DelayedRotationBuffer:
+    """Accumulate ``M <- M @ G_wave`` lazily, flushing every ``k_delay``.
+
+    Args:
+      M: initial accumulator ``(m, n)`` (e.g. an identity basis).
+      k_delay: waves buffered per flush (the SS5.1 delay depth).
+      method: dispatch method for the flush; ``"auto"`` consults the
+        registry cost model + plan cache.
+      autotune: measure candidate plans on first flush (``auto`` only).
+      apply_kw: extra kwargs forwarded to ``apply_rotation_sequence``
+        (e.g. explicit ``n_b``/``k_b`` overrides).
+    """
+
+    def __init__(self, M, *, k_delay: int = 32, method: str = "auto",
+                 autotune: bool = False, pad_flush: bool = True,
+                 **apply_kw):
+        import jax.numpy as jnp
+
+        if k_delay < 1:
+            raise ValueError(f"k_delay must be >= 1, got {k_delay}")
+        self._M = jnp.asarray(M)
+        if self._M.ndim != 2:
+            raise ValueError(f"accumulator must be 2D, got {self._M.shape}")
+        self.k_delay = int(k_delay)
+        self.method = method
+        self.autotune = autotune
+        self.pad_flush = bool(pad_flush)
+        self.apply_kw = dict(apply_kw)
+        self.planes = self._M.shape[1] - 1
+        self.flushes = 0
+        self.waves_pushed = 0
+        self._c: list = []
+        self._s: list = []
+        self._g: list = []  # per-wave sign columns; None = all-rotation
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"DelayedRotationBuffer(shape={tuple(self._M.shape)}, "
+                f"pending={len(self._c)}/{self.k_delay}, "
+                f"flushes={self.flushes}, method={self.method!r})")
+
+    @property
+    def pending(self) -> int:
+        return len(self._c)
+
+    def push(self, c, s, g=None) -> "DelayedRotationBuffer":
+        """Queue one wave (``(n-1,)`` cos/sin, optional sign column)."""
+        c = np.asarray(c, np.float64).reshape(-1)
+        s = np.asarray(s, np.float64).reshape(-1)
+        if c.shape[0] != self.planes or s.shape[0] != self.planes:
+            raise ValueError(
+                f"wave has {c.shape[0]} planes; accumulator with "
+                f"{self._M.shape[1]} columns needs {self.planes}")
+        self._c.append(c)
+        self._s.append(s)
+        self._g.append(None if g is None
+                       else np.asarray(g, np.float64).reshape(-1))
+        self.waves_pushed += 1
+        if len(self._c) >= self.k_delay:
+            self.flush()
+        return self
+
+    def push_sequence(self, C, S, G=None) -> "DelayedRotationBuffer":
+        """Queue every wave (column) of ``C``/``S`` in order."""
+        C = np.asarray(C)
+        S = np.asarray(S)
+        for p in range(C.shape[1]):
+            self.push(C[:, p], S[:, p],
+                      None if G is None else np.asarray(G)[:, p])
+        return self
+
+    def _stacked(self):
+        k = len(self._c)
+        pad = self.k_delay - k if self.pad_flush else 0
+        C = np.ones((self.planes, k + pad), np.float64)
+        S = np.zeros((self.planes, k + pad), np.float64)
+        C[:, :k] = np.stack(self._c, 1)
+        S[:, :k] = np.stack(self._s, 1)
+        G = None
+        if any(g is not None for g in self._g):
+            G = np.full((self.planes, k + pad), -1.0, np.float64)
+            for p, g in enumerate(self._g):
+                if g is not None:
+                    G[:, p] = g
+        return C, S, G
+
+    def flush(self):
+        """Apply all pending waves in one registry-dispatched call."""
+        if self._c:
+            import jax.numpy as jnp
+
+            from repro.core.api import apply_rotation_sequence
+
+            C, S, G = self._stacked()
+            dt = self._M.dtype
+            self._M = apply_rotation_sequence(
+                self._M, jnp.asarray(C, dt), jnp.asarray(S, dt),
+                method=self.method,
+                G=None if G is None else jnp.asarray(G, dt),
+                autotune=self.autotune, **self.apply_kw)
+            self._c.clear()
+            self._s.clear()
+            self._g.clear()
+            self.flushes += 1
+        return self._M
+
+    @property
+    def value(self):
+        """Flush any pending waves and return the accumulator."""
+        return self.flush()

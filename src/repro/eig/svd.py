@@ -1,0 +1,212 @@
+"""Golub-Kahan SVD machinery recorded as adjacent-plane rotation sequences.
+
+Two stages, both emitting the paper's ``(planes, waves)`` C/S layout:
+
+* :func:`bidiagonalize` — reduce ``A`` (m >= n) to upper bidiagonal
+  ``B = U^T A V`` with adjacent-plane Givens only: sweep ``t`` zeroes
+  column ``t`` below the subdiagonal bottom-up with *row* rotations
+  (planes ``(i, i+1)`` of the row space, recorded in an ``(m-1, K_L)``
+  left sequence), then row ``t`` right of the superdiagonal with
+  *column* rotations (an ``(n-1, K_R)`` right sequence).  Each side uses
+  the same pipelined-staircase wave packing as
+  :mod:`repro.eig.tridiag` — descending-``j`` sweeps interleave into
+  ``O(m + n)`` waves that replay correctly in wave-major order (see that
+  module for the ordering proof).  Row ops and column ops commute as
+  linear maps, so the two recordings are independent.
+
+* :func:`bidiag_qr` — implicit-shift QR on the bidiagonal band
+  (Golub-Kahan; shift from the trailing 2x2 of ``B^T B``, zero-shift
+  fallback near-singularity a la Demmel-Kahan).  Each sweep chases the
+  bulge with one *right* rotation wave and one *left* rotation wave —
+  again adjacent planes in ascending order, i.e. one wave each per sweep.
+
+Applying the left sequence to ``M`` computes ``M @ U``; the right one,
+``M @ V``; with ``A = U B V^T`` and ``B`` diagonalized by the QR waves.
+Singular-vector accumulation is therefore entirely "delayed": the caller
+streams both recordings through ``apply_rotation_sequence`` via the
+delayed buffer (paper SS5.1), which is where the solver's flops live.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from .qr_shift import wilkinson_shift
+from .tridiag import host_givens
+
+__all__ = ["BidiagResult", "BidiagQRResult", "bidiagonalize", "bidiag_qr"]
+
+_EPS = float(np.finfo(np.float64).eps)
+
+
+class BidiagResult(NamedTuple):
+    """``B = U^T A V`` (upper bidiagonal), factors as recorded sequences."""
+
+    diag: np.ndarray       # (n,)   float64 main diagonal of B
+    superdiag: np.ndarray  # (n-1,) float64 superdiagonal of B
+    cos_left: np.ndarray   # (m-1, K_L) row-space rotations (U factor)
+    sin_left: np.ndarray
+    cos_right: np.ndarray  # (n-1, K_R) column-space rotations (V factor)
+    sin_right: np.ndarray
+
+
+def bidiagonalize(A) -> BidiagResult:
+    """Adjacent-plane Givens bidiagonalization of ``A`` with ``m >= n``."""
+    A = np.array(A, dtype=np.float64)
+    m, n = A.shape
+    if m < n:
+        raise ValueError(f"bidiagonalize expects m >= n, got {A.shape}; "
+                         f"transpose first (svd_givens does)")
+    # wave counts of the staircase packing (max index + 1, see tridiag)
+    KL = max(0, (m - 2) + (n - 1) + 1) if m >= 2 else 0
+    KR = max(0, 2 * n - 5)
+    CL = np.ones((max(m - 1, 0), KL), np.float64)
+    SL = np.zeros((max(m - 1, 0), KL), np.float64)
+    CR = np.ones((max(n - 1, 0), KR), np.float64)
+    SR = np.zeros((max(n - 1, 0), KR), np.float64)
+    for t in range(n):
+        # rows: zero A[t+1:, t] bottom-up, planes (i, i+1), i = m-2 .. t
+        for i in range(m - 2, t - 1, -1):
+            c, s = host_givens(A[i, t], A[i + 1, t])
+            if s != 0.0:
+                ri = A[i, t:].copy()
+                ri1 = A[i + 1, t:]
+                A[i, t:] = c * ri + s * ri1
+                A[i + 1, t:] = -s * ri + c * ri1
+            CL[i, (m - 2 - i) + 2 * t] = c
+            SL[i, (m - 2 - i) + 2 * t] = s
+        # columns: zero A[t, t+2:] right-to-left, planes (j, j+1),
+        # j = n-2 .. t+1
+        for j in range(n - 2, t, -1):
+            c, s = host_givens(A[t, j], A[t, j + 1])
+            if s != 0.0:
+                cj = A[t:, j].copy()
+                cj1 = A[t:, j + 1]
+                A[t:, j] = c * cj + s * cj1
+                A[t:, j + 1] = -s * cj + c * cj1
+            CR[j, (n - 2 - j) + 2 * t] = c
+            SR[j, (n - 2 - j) + 2 * t] = s
+    d = np.diagonal(A).copy()
+    f = np.diagonal(A, offset=1).copy() if n > 1 else np.zeros(0)
+    return BidiagResult(d, f, CL, SL, CR, SR)
+
+
+class BidiagQRResult(NamedTuple):
+    values: np.ndarray     # (n,) float64 diagonal after QR (signed!)
+    cos_left: np.ndarray   # (n-1, sweeps) one wave per sweep (U side)
+    sin_left: np.ndarray
+    cos_right: np.ndarray  # (n-1, sweeps) one wave per sweep (V side)
+    sin_right: np.ndarray
+    sweeps: int
+    converged: bool
+
+
+def bidiag_qr(d, f, *, tol: Optional[float] = None,
+              max_sweeps: Optional[int] = None) -> BidiagQRResult:
+    """Implicit-shift QR on upper-bidiagonal ``(d, f)``; waves recorded.
+
+    Returns the (possibly signed) diagonal and per-sweep left/right
+    rotation waves: ``diag(values) = L^T B R`` where ``L``/``R`` are the
+    recorded left/right sequences applied wave-major.  Sign fixing and
+    sorting are the caller's job (they are column flips/permutations of
+    the accumulated vectors, not rotations).
+    """
+    d = np.array(d, dtype=np.float64)
+    f = np.array(f, dtype=np.float64)
+    n = d.shape[0]
+    if f.shape[0] != max(0, n - 1):
+        raise ValueError(f"superdiagonal shape {f.shape} vs n={n}")
+    tol = _EPS if tol is None else float(tol)
+    if max_sweeps is None:
+        max_sweeps = 40 * max(1, n)
+    J = max(0, n - 1)
+    wcl: list = []
+    wsl: list = []
+    wcr: list = []
+    wsr: list = []
+
+    def pack(converged: bool) -> BidiagQRResult:
+        CL = np.stack(wcl, 1) if wcl else np.ones((J, 0))
+        SL = np.stack(wsl, 1) if wsl else np.zeros((J, 0))
+        CR = np.stack(wcr, 1) if wcr else np.ones((J, 0))
+        SR = np.stack(wsr, 1) if wsr else np.zeros((J, 0))
+        return BidiagQRResult(d, CL, SL, CR, SR, len(wcl), converged)
+
+    if n <= 1:
+        return pack(True)
+
+    def negligible(i: int) -> bool:
+        return abs(f[i]) <= tol * (abs(d[i]) + abs(d[i + 1]))
+
+    scale = float(np.max(np.abs(d)) + np.max(np.abs(f))) if n > 1 else 0.0
+    hi = n - 1
+    while hi > 0:
+        while hi > 0 and negligible(hi - 1):
+            f[hi - 1] = 0.0
+            hi -= 1
+        if hi == 0:
+            break
+        if len(wcl) >= max_sweeps:
+            return pack(False)
+        lo = hi - 1
+        while lo > 0 and not negligible(lo - 1):
+            lo -= 1
+        if lo > 0:
+            f[lo - 1] = 0.0
+
+        cl = np.ones(J, np.float64)
+        sl = np.zeros(J, np.float64)
+        cr = np.ones(J, np.float64)
+        sr = np.zeros(J, np.float64)
+        # an *exactly* zero leading diagonal stalls the implicit sweep
+        # (y = z = 0 makes every rotation the identity); the classical
+        # row-annihilation fix needs non-adjacent planes, so instead
+        # nudge d[lo] by one deflation-tolerance unit — an O(tol * ||B||)
+        # perturbation, the same order as the deflation error itself
+        if d[lo] == 0.0:
+            blockscale = max(float(np.max(np.abs(d[lo:hi + 1]))),
+                             float(np.max(np.abs(f[lo:hi]))))
+            d[lo] = tol * max(blockscale, np.finfo(np.float64).tiny)
+        # shift from the trailing 2x2 of B^T B; zero shift near a tiny
+        # diagonal (Demmel-Kahan-style: keeps sweeps adjacent-plane)
+        dm, dh, fm = d[hi - 1], d[hi], f[hi - 1]
+        fm2 = f[hi - 2] if hi - 2 >= lo else 0.0
+        if min(abs(dm), abs(dh)) <= tol * scale:
+            mu = 0.0
+        else:
+            mu = wilkinson_shift(dm * dm + fm2 * fm2, dm * fm,
+                                 dh * dh + fm * fm)
+        y = d[lo] * d[lo] - mu
+        z = d[lo] * f[lo]
+        for j in range(lo, hi):
+            # right rotation: columns (j, j+1)
+            c, s = host_givens(y, z)
+            cr[j] = c
+            sr[j] = s
+            if j > lo:
+                f[j - 1] = c * f[j - 1] + s * z  # z = right bulge
+            dj, fj = d[j], f[j]
+            d[j] = c * dj + s * fj
+            f[j] = -s * dj + c * fj
+            bulge = s * d[j + 1]
+            d[j + 1] = c * d[j + 1]
+            # left rotation: rows (j, j+1), zero the (j+1, j) bulge
+            c, s = host_givens(d[j], bulge)
+            cl[j] = c
+            sl[j] = s
+            d[j] = c * d[j] + s * bulge
+            fj, dj1 = f[j], d[j + 1]
+            f[j] = c * fj + s * dj1
+            d[j + 1] = -s * fj + c * dj1
+            if j < hi - 1:
+                bulge2 = s * f[j + 1]
+                f[j + 1] = c * f[j + 1]
+                y = f[j]
+                z = bulge2
+        wcl.append(cl)
+        wsl.append(sl)
+        wcr.append(cr)
+        wsr.append(sr)
+
+    return pack(True)

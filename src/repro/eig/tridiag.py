@@ -1,0 +1,116 @@
+"""Symmetric tridiagonalization recorded as an adjacent-plane rotation
+sequence (the front half of the `eigh_givens` QR pipeline).
+
+Classic Givens tridiagonalization zeroes ``H[i, t]`` with a rotation in
+the arbitrary plane ``(t+1, i)``; that plane pair cannot be stored in the
+paper's ``(n-1, k)`` adjacent-plane layout.  Instead we eliminate each
+column *bottom-up with adjacent planes only*: sweep ``t`` zeroes
+``H[t+2:, t]`` by rotations in planes ``(j, j+1)`` for
+``j = n-2, ..., t+1`` (each zeroing ``H[j+1, t]`` against ``H[j, t]``),
+applied two-sidedly so symmetry is preserved.  Sweep ``t`` only touches
+planes ``>= t+1``, so previously finished columns stay zero.
+
+**Wave packing.**  The recorded sequence must replay in the paper's
+wave-major order (wave ``p`` ascending, ``j`` ascending within a wave),
+while the sweeps above run *descending* in ``j``.  Rotations in planes
+``|j - j'| >= 2`` act on disjoint column pairs and commute *exactly*
+(bitwise — each touches only its own two columns), so any schedule
+respecting the dependence order of overlapping planes is equivalent.
+Placing sweep ``t``'s plane-``j`` rotation at wave
+
+    ``p(j, t) = (n - 2 - j) + 2 t``
+
+does exactly that: within a sweep, descending ``j`` lands in ascending
+waves; across sweeps ``t < t'``, conflicting planes (``|j - j'| <= 1``)
+differ in wave by ``(j - j') + 2 (t' - t) >= 1``.  This is the same
+pipelined-staircase ("communication-avoiding") packing the blocked
+appliers tile into parallelograms: ``K = 2n - 5`` waves total instead of
+one wave per rotation, so the registry backends stream the whole
+similarity transform in ``ceil(K / k_b)`` passes over the accumulator.
+
+Generation runs host-side in float64 (the coefficients are
+data-dependent scalars); the *application* of the recorded sequence — the
+flop-dominant part — is delegated to ``apply_rotation_sequence`` via
+:class:`repro.eig.delayed.DelayedRotationBuffer`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.rotations import RotationSequence
+
+__all__ = ["TridiagResult", "tridiagonalize", "tridiag_wave_count",
+           "host_givens"]
+
+
+def host_givens(a: float, b: float) -> tuple:
+    """Host-side ``(c, s)`` zeroing ``b`` against ``a`` (identity at 0)."""
+    r = float(np.hypot(a, b))
+    if r == 0.0:
+        return 1.0, 0.0
+    return a / r, b / r
+
+
+def tridiag_wave_count(n: int) -> int:
+    """Waves of the pipelined-staircase packing: ``2n - 5`` (0 for n<3)."""
+    return max(0, 2 * n - 5)
+
+
+class TridiagResult(NamedTuple):
+    """``T = Q^T H Q`` with ``Q`` recorded as adjacent-plane rotations."""
+
+    diag: np.ndarray      # (n,)   float64 diagonal of T
+    offdiag: np.ndarray   # (n-1,) float64 sub/super-diagonal of T
+    cos: np.ndarray       # (n-1, K) float64 recorded sequence
+    sin: np.ndarray       # (n-1, K)
+
+    @property
+    def n(self) -> int:
+        return self.diag.shape[0]
+
+    def sequence(self, dtype=None) -> RotationSequence:
+        """The recorded transform as a jnp :class:`RotationSequence`."""
+        import jax.numpy as jnp
+
+        dt = jnp.asarray(self.cos).dtype if dtype is None else dtype
+        return RotationSequence(jnp.asarray(self.cos, dt),
+                                jnp.asarray(self.sin, dt))
+
+
+def tridiagonalize(H) -> TridiagResult:
+    """Reduce symmetric ``H`` to tridiagonal ``T`` via adjacent rotations.
+
+    Applying the returned sequence to ``M`` computes ``M @ Q``; in
+    particular ``Q = apply(I)`` satisfies ``Q^T H Q = T`` (sub-1e-12
+    relative off-tridiagonal mass — generation is float64 throughout).
+    """
+    H = np.array(H, dtype=np.float64)
+    n = H.shape[0]
+    if H.shape != (n, n):
+        raise ValueError(f"tridiagonalize expects a square matrix, "
+                         f"got {H.shape}")
+    K = tridiag_wave_count(n)
+    C = np.ones((max(n - 1, 0), K), np.float64)
+    S = np.zeros((max(n - 1, 0), K), np.float64)
+    for t in range(n - 2):
+        for j in range(n - 2, t, -1):
+            c, s = host_givens(H[j, t], H[j + 1, t])
+            if s != 0.0:
+                # columns < t of rows/cols >= t+1 are already zero, so
+                # the update only needs the trailing t: slice
+                rj = H[j, t:].copy()
+                rj1 = H[j + 1, t:]
+                H[j, t:] = c * rj + s * rj1
+                H[j + 1, t:] = -s * rj + c * rj1
+                cj = H[t:, j].copy()
+                cj1 = H[t:, j + 1]
+                H[t:, j] = c * cj + s * cj1
+                H[t:, j + 1] = -s * cj + c * cj1
+            p = (n - 2 - j) + 2 * t
+            C[j, p] = c
+            S[j, p] = s
+    d = np.diagonal(H).copy()
+    e = np.diagonal(H, offset=1).copy() if n > 1 else np.zeros(0)
+    return TridiagResult(d, e, C, S)

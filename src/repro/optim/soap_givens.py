@@ -1,13 +1,21 @@
 """SOAP-Givens: Shampoo/SOAP-style preconditioning whose eigenbases are
-maintained by the *rotation-sequence Jacobi solver* (``core.jacobi``).
+maintained by *rotation-sequence eigensolvers*.
 
 For each 2D parameter ``W`` (d_in, d_out) we track Kronecker covariance
 factors ``L = E[G G^T]`` and ``R = E[G^T G]`` (dims capped at
 ``max_dim``).  Every ``update_freq`` steps the eigenbases of ``L`` and
-``R`` are refreshed by round-robin Jacobi — whose pivots are recorded as
-a rotation/reflector sequence and *applied with the paper's optimized
-kernels* (``jacobi_apply_basis``).  Between refreshes, gradients are
-rotated into the eigenbasis, Adam runs there, and updates rotate back:
+``R`` are refreshed by a solver that *records* its pivots as a rotation
+sequence and applies them with the paper's optimized kernels through the
+registry (``method="auto"`` cost-model dispatch):
+
+* ``solver="jacobi"`` (default) — round-robin Jacobi (``core.jacobi``),
+  jit-friendly (runs inside ``lax.cond``).
+* ``solver="qr"`` — tridiagonal Wilkinson-shift QR
+  (``repro.eig.eigh_givens``), fewer recorded waves per refresh for
+  large dims; host-driven, so it requires *eager* optimizer updates.
+
+Between refreshes, gradients are rotated into the eigenbasis, Adam runs
+there, and updates rotate back:
 
     G~ = Q_L^T G Q_R ;  Adam(G~) ;  U = Q_L U~ Q_R^T
 
@@ -40,12 +48,39 @@ class SoapGivens:
     eps: float = 1e-8
     weight_decay: float = 0.0
     shampoo_beta: float = 0.95
-    update_freq: int = 10          # Jacobi basis refresh period
+    update_freq: int = 10          # basis refresh period
     jacobi_cycles: int = 4
     max_dim: int = 512             # cap covariance side (block to identity)
+    solver: str = "jacobi"         # "jacobi" | "qr" (qr: eager-only)
+    apply_method: str = "auto"     # registry dispatch for basis refresh
 
     def _lr(self, step):
         return self.lr(step) if callable(self.lr) else self.lr
+
+    def _qr_refresh(self, refresh, L, R, st):
+        """Eager tridiagonal-QR eigenbasis refresh (``solver="qr"``).
+
+        The QR solver generates rotations host-side (data-dependent
+        bulge chasing), so the refresh predicate must be concrete —
+        i.e. the optimizer update must run outside ``jit``.
+        """
+        from repro.eig import eigh_givens
+
+        try:
+            do = bool(refresh)
+        except jax.errors.TracerBoolConversionError as exc:
+            raise RuntimeError(
+                "SoapGivens(solver='qr') generates rotations host-side "
+                "and cannot run under jit; use solver='jacobi' inside "
+                "jitted train steps or call update() eagerly"
+            ) from exc
+        if not do:
+            return st["QL"], st["QR"]
+        _, QL = eigh_givens(L, method="qr",
+                            apply_method=self.apply_method)
+        _, QR = eigh_givens(R, method="qr",
+                            apply_method=self.apply_method)
+        return QL, QR
 
     def init(self, params):
         def one(p):
@@ -84,16 +119,19 @@ class SoapGivens:
 
                 def do_refresh(_):
                     # Jacobi on the covariances; basis applied via the
-                    # paper's rotation-sequence machinery
+                    # registry-dispatched rotation-sequence machinery
                     resL = jacobi_eigh(L, cycles=self.jacobi_cycles)
                     resR = jacobi_eigh(R, cycles=self.jacobi_cycles)
-                    QL = jacobi_apply_basis(resL, method="accumulated")
-                    QR = jacobi_apply_basis(resR, method="accumulated")
+                    QL = jacobi_apply_basis(resL, method=self.apply_method)
+                    QR = jacobi_apply_basis(resR, method=self.apply_method)
                     return QL, QR
 
-                QL, QR = jax.lax.cond(
-                    refresh, do_refresh,
-                    lambda _: (st["QL"], st["QR"]), None)
+                if self.solver == "qr":
+                    QL, QR = self._qr_refresh(refresh, L, R, st)
+                else:
+                    QL, QR = jax.lax.cond(
+                        refresh, do_refresh,
+                        lambda _: (st["QL"], st["QR"]), None)
                 g_rot = QL.T @ g @ QR
             else:
                 QL = QR = None

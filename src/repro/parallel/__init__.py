@@ -1,5 +1,12 @@
+from .compression import (compress_lowrank, compressed_psum,
+                          decompress_lowrank, error_feedback_update,
+                          lowrank_error_feedback, lowrank_wire_bytes,
+                          svd_lowrank)
 from .sharding import (AxisRules, DEFAULT_RULES, axis_rules, current_rules,
                        logical_to_spec, param_spec, shard)
 
 __all__ = ["AxisRules", "DEFAULT_RULES", "axis_rules", "current_rules",
-           "logical_to_spec", "param_spec", "shard"]
+           "logical_to_spec", "param_spec", "shard",
+           "compressed_psum", "error_feedback_update",
+           "svd_lowrank", "compress_lowrank", "decompress_lowrank",
+           "lowrank_error_feedback", "lowrank_wire_bytes"]

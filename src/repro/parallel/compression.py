@@ -7,6 +7,12 @@ suppressed by *error feedback* (the residual is carried to the next
 step — standard EF-SGD).  Used via ``CompressedGradSync`` around the
 data-parallel gradient reduction.
 
+``compress_lowrank`` is the rank-r alternative for 2D gradients: a
+Golub-Kahan SVD (``repro.eig.svd_givens`` — singular vectors accumulated
+through the rotation-sequence registry) truncated to rank ``r`` sends
+``r (m + n)`` floats instead of ``m n``.  Pairs with the same error
+feedback via :func:`lowrank_error_feedback`.
+
 Implementation note: quantized values cannot be summed directly (scales
 differ per shard), so the exchange is an all-to-all-free two-phase
 ring-style reduction expressed with ``psum`` over dequantized chunks; the
@@ -21,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["quantize_for_allreduce", "dequantize_after_allreduce",
-           "compressed_psum", "error_feedback_update"]
+           "compressed_psum", "error_feedback_update",
+           "svd_lowrank", "compress_lowrank", "decompress_lowrank",
+           "lowrank_error_feedback", "lowrank_wire_bytes"]
 
 _CHUNK = 256
 
@@ -66,3 +74,54 @@ def wire_bytes(x) -> int:
     n = x.size
     chunks = -(-n // _CHUNK)
     return n + 4 * chunks  # int8 payload + fp32 scales
+
+
+# --------------------------------------------------------------- low-rank --
+
+def svd_lowrank(W, rank: int):
+    """Truncated SVD of a 2D array via the rotation-sequence SVD solver.
+
+    Returns ``(U_r, s_r, Vt_r)`` with ``U_r (m, r)``, ``s_r (r,)``,
+    ``Vt_r (r, n)`` — the best rank-``r`` approximation factors.
+    """
+    from repro.eig import svd_givens  # lazy: parallel must not need eig
+
+    if W.ndim != 2:
+        raise ValueError(f"svd_lowrank expects a 2D array, got {W.shape}")
+    r = min(int(rank), min(W.shape))
+    U, s, Vt = svd_givens(W)
+    return U[:, :r], s[:r], Vt[:r, :]
+
+
+def compress_lowrank(W, rank: int) -> Tuple[jax.Array, jax.Array]:
+    """Rank-``r`` wire format for a 2D gradient: ``(P, Q)``.
+
+    ``P = U_r * s_r`` (m, r) and ``Q = Vt_r`` (r, n);
+    ``decompress_lowrank(P, Q) = P @ Q`` is the best rank-``r``
+    approximation of ``W``.
+    """
+    U, s, Vt = svd_lowrank(W, rank)
+    return U * s[None, :], Vt
+
+
+def decompress_lowrank(P, Q) -> jax.Array:
+    return P @ Q
+
+
+def lowrank_error_feedback(grad, residual, rank: int):
+    """EF-SGD with a low-rank code: compress ``grad + residual``.
+
+    Returns ``(sent, new_residual)`` like :func:`error_feedback_update`;
+    the discarded singular directions are carried to the next step.
+    """
+    total = grad + residual
+    P, Q = compress_lowrank(total, rank)
+    sent = decompress_lowrank(P, Q)
+    return sent, total - sent
+
+
+def lowrank_wire_bytes(shape, rank: int, itemsize: int = 4) -> int:
+    """Bytes on the wire for the ``(P, Q)`` format."""
+    m, n = shape
+    r = min(int(rank), m, n)
+    return itemsize * r * (m + n)

@@ -1,0 +1,10 @@
+"""Suite-wide hermeticity.
+
+The plan-cache persistence layer loads ``~/.cache/repro/plans.json`` at
+import time; a developer's locally autotuned plans would otherwise leak
+into ``method="auto"`` dispatch assertions (machine-local flakes).  Off
+by default here; the persistence tests opt back in via ``monkeypatch``.
+"""
+import os
+
+os.environ.setdefault("REPRO_PLAN_CACHE", "off")

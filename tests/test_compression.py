@@ -37,3 +37,53 @@ def test_error_feedback_converges():
     # residual bounds the cumulative error
     drift = np.abs(total_true - total_sent).max()
     assert drift <= float(jnp.abs(residual).max()) + 1e-6
+
+
+# --------------------------------------------------------------- low-rank --
+
+def test_lowrank_exact_on_lowrank_input():
+    """A rank-r matrix round-trips through the rank-r wire format."""
+    from repro.parallel.compression import (compress_lowrank,
+                                            decompress_lowrank,
+                                            lowrank_wire_bytes)
+
+    rng = np.random.default_rng(3)
+    W = rng.standard_normal((24, 4)) @ rng.standard_normal((4, 18))
+    W = jnp.asarray(W, jnp.float32)
+    P, Q = compress_lowrank(W, 4)
+    assert P.shape == (24, 4) and Q.shape == (4, 18)
+    np.testing.assert_allclose(np.asarray(decompress_lowrank(P, Q)),
+                               np.asarray(W), atol=1e-4)
+    assert lowrank_wire_bytes(W.shape, 4) < W.size * 4
+
+
+def test_lowrank_truncation_is_best_approximation():
+    """Truncated svd_givens matches numpy's optimal rank-r error."""
+    from repro.parallel.compression import svd_lowrank
+
+    rng = np.random.default_rng(5)
+    W = rng.standard_normal((20, 15)).astype(np.float32)
+    r = 5
+    U, s, Vt = svd_lowrank(jnp.asarray(W), r)
+    approx = np.asarray(U, np.float64) @ np.diag(np.asarray(s, np.float64)) \
+        @ np.asarray(Vt, np.float64)
+    sr = np.linalg.svd(W.astype(np.float64), compute_uv=False)
+    err = np.linalg.norm(W - approx)
+    best = np.linalg.norm(sr[r:])
+    assert err <= best * (1 + 1e-3) + 1e-5
+
+
+def test_lowrank_error_feedback_tracks_gradient():
+    from repro.parallel.compression import lowrank_error_feedback
+
+    rng = np.random.default_rng(7)
+    residual = jnp.zeros((16, 12))
+    total_true = np.zeros((16, 12))
+    total_sent = np.zeros((16, 12))
+    for _ in range(10):
+        g = jnp.asarray(rng.standard_normal((16, 12)) * 0.1, jnp.float32)
+        sent, residual = lowrank_error_feedback(g, residual, rank=3)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(sent)
+    drift = np.abs(total_true - total_sent).max()
+    assert drift <= float(jnp.abs(residual).max()) + 1e-5

@@ -27,6 +27,21 @@ def test_eigh_and_basis(n, method):
         V.T @ H @ V, np.diag(np.asarray(res.eigenvalues)), atol=2e-4 * n)
 
 
+def test_apply_basis_auto_dispatch():
+    """Default method='auto' routes through the registry and matches the
+    explicitly-dispatched blocked-family result exactly (the sign-carrying
+    sequence restricts auto to the blocked family)."""
+    n = 16
+    rng = np.random.default_rng(2)
+    X = rng.standard_normal((n, n)).astype(np.float32)
+    H = (X + X.T) / 2
+    res = jacobi_eigh(jnp.array(H), cycles=8)
+    V_auto = np.asarray(jacobi_apply_basis(res))  # method="auto" default
+    V_named = np.asarray(jacobi_apply_basis(res, method="blocked"))
+    np.testing.assert_allclose(V_auto, V_named, atol=1e-6)
+    np.testing.assert_allclose(V_auto.T @ V_auto, np.eye(n), atol=1e-5 * n)
+
+
 def test_delayed_sequence_application():
     """G @ V without forming V — the paper's 'delayed sequence' use."""
     n = 12
