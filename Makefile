@@ -5,13 +5,19 @@
 # jax.lax.pcast / jax.lax.pvary / pltpu.[TPU]CompilerParams) appears
 # outside src/repro/compat.py (the recursive grep covers every package,
 # src/repro/eig/ included), that the eig subsystem routes all rotation
-# application through the dispatch registry (eig-gate), then runs the
-# full test suite.
+# application through the dispatch registry (eig-gate), that internal
+# code speaks RotationSequence rather than raw (A, C, S) arrays
+# (seq-gate), then runs the full test suite.
 
-.PHONY: check test compat-gate eig-gate smoke bench
+.PHONY: check test compat-gate eig-gate seq-gate smoke bench
 
-check: compat-gate eig-gate test
+check: compat-gate eig-gate seq-gate test
 
+# pytest.ini promotes the library's own DeprecationWarnings to errors
+# when they originate *from repro internals* (module regex; a -W flag
+# cannot express this because it escapes+anchors the module field):
+# internal callers must stay on the typed RotationSequence API, while
+# external callers of the compat wrappers only get the warning.
 test:
 	PYTHONPATH=src python -m pytest -q
 
@@ -30,6 +36,17 @@ eig-gate:
 		--include='*.py' src/repro/eig \
 		|| { echo 'eig-gate FAILED: src/repro/eig must go through the dispatch registry (see matches above)'; exit 1; }
 	@echo 'eig-gate OK'
+
+# Internal code must construct RotationSequence objects and go through
+# seq.plan / SequencePlan.apply; the raw-array entry point
+# apply_rotation_sequence(...) is the *external* compatibility wrapper
+# and may only be called from core/api.py itself.
+seq-gate:
+	@! grep -rnE 'apply_rotation_sequence\s*\(' \
+		--include='*.py' src/repro \
+		| grep -v 'src/repro/core/api\.py' \
+		|| { echo 'seq-gate FAILED: internal raw (A, C, S) application outside core/api.py — construct a RotationSequence and use seq.plan(...).apply (see matches above)'; exit 1; }
+	@echo 'seq-gate OK'
 
 smoke:
 	PYTHONPATH=src:. python benchmarks/run.py --only smoke

@@ -16,7 +16,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks.common import apply_method, emit, time_fn
+from benchmarks.common import emit, time_fn
 from repro.core import jacobi_eigh
 from repro.core.rotations import RotationSequence
 from repro.eig import tridiag_qr, tridiagonalize
@@ -36,14 +36,12 @@ def _qr_recording(n: int, rng) -> RotationSequence:
                             jnp.asarray(S, jnp.float32))
 
 
-def _time_apply(tag: str, n: int, seq: RotationSequence, G=None):
-    k = min(seq.k, _K_TIME)
-    C, S = seq.cos[:, :k], seq.sin[:, :k]
-    G = None if G is None else G[:, :k]
+def _time_apply(tag: str, n: int, seq: RotationSequence):
+    sl = seq[:min(seq.k, _K_TIME)]  # timed window of recorded waves
     M = jnp.eye(n, dtype=jnp.float32)
-    sl = RotationSequence(C, S)
-    dt = time_fn(lambda: apply_method(M, sl, "auto", G=G))
-    nrot = int(np.count_nonzero(np.asarray(S)))
+    plan = sl.plan(like=M, method="auto")  # plan once, time the applies
+    dt = time_fn(lambda: plan.apply(M))
+    nrot = int(np.count_nonzero(np.asarray(sl.sin)))
     emit(f"eig/{tag}_n{n}", dt, f"{nrot / dt / 1e6:.2f}_Mrot_s")
 
 
@@ -54,8 +52,7 @@ def run(sizes=SIZES) -> None:
         X = rng.standard_normal((n, n)).astype(np.float32)
         res = jacobi_eigh(jnp.asarray((X + X.T) / 2),
                           cycles=2 if n <= 256 else 1)
-        _time_apply("jacobi_apply", n,
-                    RotationSequence(res.cos, res.sin), G=res.sign)
+        _time_apply("jacobi_apply", n, res.rotation_sequence())
 
 
 if __name__ == "__main__":

@@ -34,11 +34,11 @@ def timed(fn):
     return sorted(ts)[1]
 
 row = timed(lambda: rot_sequence_row_sharded(
-    A, seq.cos, seq.sin, mesh, row_axes=("data",), n_b=64, k_b=16,
+    A, seq, mesh, row_axes=("data",), n_b=64, k_b=16,
     method="accumulated"))
 mesh2 = jax.make_mesh((1, D), ("data", "model"))
 col = timed(lambda: rot_sequence_column_sharded_padded(
-    A, seq.cos, seq.sin, mesh2, col_axis="model", n_b=32, k_b=16,
+    A, seq, mesh2, col_axis="model", n_b=32, k_b=16,
     row_axes=(), method="accumulated"))
 comm = column_sharded_comm_bytes(m, n, k, D, 32, 16)
 print("RESULT %.6f %.6f %.1f" % (row, col, comm["ratio"]))

@@ -29,6 +29,17 @@ def run():
     emit(f"smoke/auto->{plan.method}", dt,
          f"nb{plan.n_b}_kb{plan.k_b}_cached")
 
+    # plan-once/apply-many: amortized SequencePlan.apply vs per-call
+    # registry dispatch — the API-level win the typed interface exists
+    # for (dispatch + plan-cache probe + kwarg plumbing off the hot path)
+    frozen = seq.plan(like=A, method="auto")
+    dt_plan = time_fn(lambda: frozen.apply(A))
+    dt_dispatch = time_fn(lambda: apply_method(A, seq, "auto"))
+    assert (frozen.apply(A) == apply_method(A, seq, "auto")).all(), \
+        "SequencePlan.apply diverged from dispatched apply"
+    emit("smoke/plan_once_apply_many", dt_plan,
+         f"dispatch_overhead_{max(dt_dispatch - dt_plan, 0.0)*1e6:.1f}us")
+
     # eigensolver liveness: QR path end-to-end through the delayed buffer
     import time
 

@@ -44,5 +44,10 @@ def emit(name: str, seconds: float, derived: str):
 
 
 def apply_method(A, seq, method: str = "auto", **kw):
-    """Benchmark entry point routed through the dispatch registry."""
+    """Benchmark entry point routed through the dispatch registry.
+
+    Deliberately exercises the raw-array compat wrapper (per-call
+    dispatch); the plan-once/apply-many comparison row in bench_smoke
+    uses ``seq.plan(...).apply`` directly.
+    """
     return apply_rotation_sequence(A, seq.cos, seq.sin, method=method, **kw)

@@ -1,7 +1,9 @@
 """Quickstart: apply a sequence of planar rotations to a matrix.
 
 Demonstrates the API ladder from the paper's baseline to the optimized
-TPU-oriented paths, and verifies they agree.
+TPU-oriented paths, verifies they agree, and shows the idiomatic
+plan-once/apply-many flow (plus autodiff) of the first-class
+``RotationSequence`` type.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,7 +18,7 @@ from repro.core import apply_rotation_sequence, random_sequence
 m, n, k = 1024, 512, 64
 A = jnp.asarray(np.random.default_rng(0).standard_normal((m, n)),
                 jnp.float32)
-seq = random_sequence(jax.random.key(0), n, k)
+seq = random_sequence(jax.random.key(0), n, k)  # a RotationSequence
 
 print(f"A: {m}x{n}, rotations: {n-1}x{k}  "
       f"({6*m*(n-1)*k/1e9:.2f} Gflop)")
@@ -27,8 +29,7 @@ for method, kw in [
     ("blocked", dict(n_b=64, k_b=16)),         # paper SS2/SS5 blocking
     ("accumulated", dict(n_b=96, k_b=96)),     # rs_gemm / TPU MXU path
 ]:
-    fn = lambda: apply_rotation_sequence(A, seq.cos, seq.sin,
-                                         method=method, **kw)
+    fn = lambda: seq.apply(A, method=method, **kw)
     out = jax.block_until_ready(fn())
     t0 = time.perf_counter()
     jax.block_until_ready(fn())
@@ -39,10 +40,28 @@ for method, kw in [
     print(f"{method:12s} {dt*1e3:8.1f} ms   "
           f"{6*m*(n-1)*k/dt/1e9:7.2f} Gflop/s   max|diff|={err:.2e}")
 
+# plan-once/apply-many: resolve the registry a single time, then hit the
+# chosen backend directly on every call
+plan = seq.plan(like=A, method="auto")
+out_auto = jax.block_until_ready(plan.apply(A))
+print(f"plan: {plan.method}  kwargs={dict(plan.kwargs)}  "
+      f"max|diff|={float(jnp.abs(out_auto - ref).max()):.2e}")
+
+# composition: the transposed sequence undoes the original ...
+roundtrip = seq.T.apply(seq.apply(A, method="blocked"), method="blocked")
+print(f"seq.T roundtrip        max|diff|={float(jnp.abs(roundtrip - A).max()):.2e}")
+
+# ... and jax.grad works through plan.apply (cotangent = one application
+# of the transposed sequence; no unrolled rotation tape)
+g = jax.grad(lambda a: (plan.apply(a) ** 2).sum())(A)
+print(f"jax.grad through plan.apply: grad shape {g.shape}")
+
+# the raw-array compat wrapper is still available for loose C/S arrays
+out_compat = apply_rotation_sequence(A, seq.cos, seq.sin, method="auto")
+assert (out_compat == out_auto).all()
+
 # Pallas TPU kernels, validated in interpret mode on CPU
-out = apply_rotation_sequence(A[:64], seq.cos, seq.sin,
-                              method="pallas_mxu", n_b=32, k_b=32,
-                              m_blk=64)
+out = seq.apply(A[:64], method="pallas_mxu", n_b=32, k_b=32, m_blk=64)
 err = float(jnp.abs(out - ref[:64]).max())
 print(f"pallas_mxu (interpret)  max|diff|={err:.2e}")
 print("OK")

@@ -1,17 +1,22 @@
 """The paper's primary contribution: rotation-sequence application.
 
-Submodules: ``ref`` (Alg 1.2/1.3 oracles), ``blocked`` (SS2/SS5 blocking),
-``accumulate`` (rs_gemm/MXU), ``distributed`` (shard_map row/column
-sharding), ``jacobi`` (eigensolver consumer), ``api`` (dispatch).
+The first-class object is :class:`~repro.core.sequence.RotationSequence`
+(``sequence``): plan once with ``seq.plan(like=A)``, apply many with the
+frozen :class:`~repro.core.sequence.SequencePlan`.  Submodules: ``ref``
+(Alg 1.2/1.3 oracles), ``blocked`` (SS2/SS5 blocking), ``accumulate``
+(rs_gemm/MXU), ``distributed`` (shard_map row/column sharding),
+``jacobi`` (eigensolver consumer), ``api`` (backend registration + the
+raw-array compat wrapper).
 """
 from .api import METHODS, apply_rotation_sequence
 from .jacobi import JacobiResult, jacobi_apply_basis, jacobi_eigh
 from .rotations import (RotationSequence, givens, identity_sequence,
                         random_sequence, sequence_to_dense)
+from .sequence import SequencePlan
 
 __all__ = [
     "METHODS", "apply_rotation_sequence",
     "JacobiResult", "jacobi_apply_basis", "jacobi_eigh",
-    "RotationSequence", "givens", "identity_sequence", "random_sequence",
-    "sequence_to_dense",
+    "RotationSequence", "SequencePlan", "givens", "identity_sequence",
+    "random_sequence", "sequence_to_dense",
 ]

@@ -1,7 +1,11 @@
-"""Public API for rotation-sequence application.
+"""Backend registration + the raw-array compatibility entry point.
 
-``apply_rotation_sequence(A, C, S, method=...)`` dispatches through the
-backend **registry** (:mod:`repro.core.registry`); ``method`` one of:
+The idiomatic API lives in :mod:`repro.core.sequence`: build a
+:class:`~repro.core.sequence.RotationSequence`, resolve it once with
+``seq.plan(like=A)``, and apply the frozen plan many times.
+``apply_rotation_sequence(A, C, S, method=...)`` below is the thin
+back-compat wrapper over that machinery for callers still holding loose
+``C``/``S`` arrays; ``method`` one of:
 
   ``unoptimized``   Algorithm 1.2 (paper baseline, jnp)
   ``wavefront``     Algorithm 1.3 (jnp)
@@ -19,11 +23,23 @@ platforms, per-entry-sign support, shard_map compatibility, Pallas
 requirements) and a cost model from the paper's SS6 memory-operation
 analysis.  Explicit ``n_b``/``k_b``/``m_blk`` arguments always override
 the planned tiles.
+
+Deprecation policy: the raw-array kwargs that duplicate
+``RotationSequence`` state (``G=`` per-entry signs) warn with
+``DeprecationWarning`` and will be removed once external callers have
+migrated; plain ``(A, C, S)`` positional calls remain supported as the
+compatibility surface.  Internal ``src/repro`` code must construct
+``RotationSequence`` objects instead — ``make seq-gate`` and the
+``pytest.ini`` DeprecationWarning-to-error filter (scoped to warnings
+originating from ``repro.*`` frames) enforce it.
 """
 from __future__ import annotations
 
+import warnings
+
 from repro.core import registry
 from repro.core.registry import BackendSpec, Capability, select_plan
+from repro.core.sequence import RotationSequence
 
 from .accumulate import rot_sequence_accumulated
 from .blocked import rot_sequence_blocked
@@ -145,41 +161,46 @@ def apply_rotation_sequence(A, C, S, *, method: str = "accumulated",
                             autotune: bool = False, **kw):
     """Apply the rotation sequence ``(C, S)`` to ``A`` from the right.
 
-    ``method="auto"`` consults the registry: capability filtering, the
-    SS6 cost model (or measured autotune), and the per-(shape, dtype,
-    platform) plan cache decide the backend and tile sizes.  A named
-    ``method`` keeps the seed behaviour: every tiled backend defaults to
-    ``n_b=64, k_b=16`` unless overridden.
-    """
-    if method == "auto":
-        m, n = A.shape
-        _, k = C.shape
-        if n < 2 or k < 1 or m < 1:
-            return A  # no rotation sites: application is the identity
-        plan = select_plan(m, n, k, dtype=A.dtype,
-                           platform=kw.pop("platform", None),
-                           signs=G is not None,
-                           sharded=kw.pop("sharded", False),
-                           autotune=autotune)
-        planned = plan.kwargs()
-        if n_b is not None:
-            planned["n_b"] = n_b
-        if k_b is not None:
-            planned["k_b"] = k_b
-        planned.update(kw)
-        spec = registry.get_backend(plan.method)
-        return spec.fn(A, C, S, reflect=reflect, G=G, **planned)
+    Back-compat wrapper: wraps the loose arrays in a
+    :class:`~repro.core.sequence.RotationSequence` and executes one
+    freshly resolved :class:`~repro.core.sequence.SequencePlan`.
+    ``method="auto"`` consults the registry (capability filter, SS6 cost
+    model / autotune, per-(shape, dtype, platform) plan cache); a named
+    ``method`` keeps the seed behaviour (tiled backends default to
+    ``n_b=64, k_b=16``).  Empty sequences (``n < 2`` or ``k < 1``) are
+    the identity under *every* method.
 
-    spec = registry.get_backend(method)  # raises ValueError if unknown
-    if G is not None and not spec.capability.supports_signs:
-        raise ValueError(
-            f"method {method!r} does not support per-entry signs (G); "
-            f"use a blocked-family backend"
-        )
-    planned = dict(kw)
-    for planner_kw in ("sharded", "platform"):  # planner-only kwargs
-        planned.pop(planner_kw, None)
-    if spec.candidates is not registry.no_tiles:  # registry: tiled backend
-        planned["n_b"] = 64 if n_b is None else n_b  # seed defaults
-        planned["k_b"] = 16 if k_b is None else k_b
-    return spec.fn(A, C, S, reflect=reflect, G=G, **planned)
+    Prefer the typed API for new code — especially for repeated
+    applications, where ``seq.plan(like=A)`` amortizes dispatch:
+
+    ======================================  ==================================
+    raw-array call                          RotationSequence API
+    ======================================  ==================================
+    ``apply_rotation_sequence(A, C, S)``    ``seq.apply(A)``
+    ``..., G=G)``                           ``RotationSequence(C, S, sign=G)``
+    ``..., reflect=True)``                  ``RotationSequence(C, S, reflect=True)``
+    ``..., method=..., n_b=..., k_b=...)``  ``seq.plan(like=A, method=..., ...)``
+    per-call dispatch                       ``plan.apply(A)`` (plan once)
+    ======================================  ==================================
+
+    Autodiff note: this wrapper calls the planned backend *directly*, so
+    it keeps the seed's native JAX differentiation semantics — including
+    gradients w.r.t. ``C``/``S`` through the pure-jnp backends.  The
+    typed ``plan.apply`` instead uses the transposed-sequence
+    ``custom_vjp`` (exact and cheap w.r.t. ``A``; the sequence is a
+    constant there — see :mod:`repro.core.sequence`).
+    """
+    if G is not None:
+        warnings.warn(
+            "apply_rotation_sequence(G=...) with a raw per-entry sign "
+            "array is deprecated; construct "
+            "RotationSequence(C, S, sign=G) and use seq.apply / "
+            "seq.plan(...).apply instead",
+            DeprecationWarning, stacklevel=2)
+    seq = RotationSequence(C, S, G, reflect)
+    platform = kw.pop("platform", None)
+    sharded = kw.pop("sharded", False)
+    plan = seq.plan(like=A, method=method, autotune=autotune,
+                    platform=platform, sharded=sharded,
+                    n_b=n_b, k_b=k_b, **kw)
+    return plan.apply_direct(A)

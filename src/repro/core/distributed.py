@@ -1,6 +1,9 @@
 """Distributed application of rotation sequences (shard_map).
 
-Two sharding regimes, composable:
+All entry points take a :class:`~repro.core.sequence.RotationSequence`
+(itself a pytree, so it crosses the shard_map boundary natively); the
+legacy raw ``(C, S)`` array signatures are accepted with a
+``DeprecationWarning``.  Two sharding regimes, composable:
 
 * **Row sharding** (paper SS7): rows of ``A`` are independent — shard ``m``
   over any mesh axes, replicate ``C``/``S``, zero communication.  This is
@@ -29,7 +32,7 @@ program stays SPMD-uniform.
 from __future__ import annotations
 
 import math
-from functools import partial
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +42,7 @@ from repro import compat
 
 from .accumulate import accumulate_tile_factors
 from .blocked import apply_tile, pack_sheared
+from .sequence import RotationSequence
 
 __all__ = [
     "rot_sequence_row_sharded",
@@ -47,10 +51,49 @@ __all__ = [
 ]
 
 
-def rot_sequence_row_sharded(A, C, S, mesh, *, row_axes=("data",),
+def _coerce_sequence(seq, args, mesh, who: str):
+    """Accept the typed signature ``(A, seq, mesh, ...)`` (``mesh``
+    positional or keyword) or the legacy raw-array one
+    ``(A, C, S, mesh, ...)`` (deprecated)."""
+    if isinstance(seq, RotationSequence):
+        if len(args) > 1:
+            raise TypeError(
+                f"{who}(A, seq, mesh, ...) got {len(args) + 2} positional "
+                f"arguments")
+        if args:
+            if mesh is not None:
+                raise TypeError(f"{who}() got mesh twice (positional "
+                                f"and keyword)")
+            mesh = args[0]
+    else:
+        if not 1 <= len(args) <= 2:
+            raise TypeError(
+                f"{who} takes (A, RotationSequence, mesh, ...) or the "
+                f"deprecated raw-array form (A, C, S, mesh, ...)")
+        S = args[0]
+        if len(args) == 2:
+            if mesh is not None:
+                raise TypeError(f"{who}() got mesh twice (positional "
+                                f"and keyword)")
+            mesh = args[1]
+        warnings.warn(
+            f"{who}(A, C, S, mesh) with raw wave arrays is deprecated; "
+            f"pass a RotationSequence: {who}(A, RotationSequence(C, S), "
+            f"mesh)", DeprecationWarning, stacklevel=3)
+        seq = RotationSequence(seq, S)
+    if mesh is None:
+        raise TypeError(f"{who}() missing required argument: 'mesh'")
+    return seq, mesh
+
+
+def rot_sequence_row_sharded(A, seq, *args, mesh=None, row_axes=("data",),
                              n_b: int | None = None, k_b: int | None = None,
                              method: str = "blocked"):
     """Row-sharded application: zero communication (paper SS7).
+
+    ``rot_sequence_row_sharded(A, seq, mesh)`` shards rows of ``A`` over
+    ``row_axes`` and replicates the :class:`RotationSequence` (itself a
+    pytree, so it crosses the shard_map boundary like any array pair).
 
     ``method`` may be any registry backend whose capability record marks
     it shard_map-compatible (``supports_sharding``), or ``"auto"``.
@@ -58,27 +101,29 @@ def rot_sequence_row_sharded(A, C, S, mesh, *, row_axes=("data",),
     -capable backends and the plan picks tiles; explicit ``n_b``/``k_b``
     override the plan (named methods default to the seed 64/16).
     """
-    from .api import apply_rotation_sequence
     from .registry import get_backend
 
-    tile_kw = {key: val for key, val in (("n_b", n_b), ("k_b", k_b))
-               if val is not None}
-    if method == "auto":
-        fn = partial(apply_rotation_sequence, method="auto", sharded=True,
-                     **tile_kw)
-    else:
-        if not get_backend(method).capability.supports_sharding:
-            raise ValueError(f"method {method!r} cannot run inside shard_map")
-        fn = partial(apply_rotation_sequence, method=method,
-                     **{"n_b": 64, "k_b": 16, **tile_kw})
+    seq, mesh = _coerce_sequence(seq, args, mesh,
+                                 "rot_sequence_row_sharded")
+    if method != "auto" and \
+            not get_backend(method).capability.supports_sharding:
+        raise ValueError(f"method {method!r} cannot run inside shard_map")
 
+    def local_fn(a, sq):
+        # apply_direct: native autodiff through the shard-local backend
+        # (unchanged semantics vs the raw-array signature)
+        plan = sq.plan(like=a, method=method, sharded=(method == "auto"),
+                       n_b=n_b, k_b=k_b)
+        return plan.apply_direct(a)
+
+    seq_specs = jax.tree_util.tree_map(lambda _: P(None, None), seq)
     local = compat.shard_map(
-        lambda a, c, s: fn(a, c, s),
+        local_fn,
         mesh=mesh,
-        in_specs=(P(row_axes, None), P(None, None), P(None, None)),
+        in_specs=(P(row_axes, None), seq_specs),
         out_specs=P(row_axes, None),
     )
-    return local(A, C, S)
+    return local(A, seq)
 
 
 def _pack_local(C, S, c0, k_b, n_b, T_tot, p0):
@@ -126,10 +171,11 @@ def _sweep(X0carry, fresh_tiles, Ct, St, Gt, use_mxu: bool):
     return jax.lax.scan(step, X0carry, (Ct, St, Gt, fresh_tiles))
 
 
-def rot_sequence_column_sharded(A, C, S, mesh, *, col_axis: str = "model",
+def rot_sequence_column_sharded(A, seq, *args, mesh=None,
+                                col_axis: str = "model",
                                 n_b: int = 64, k_b: int = 16,
                                 row_axes=(), method: str = "blocked"):
-    """Column-sharded pipelined application.
+    """Column-sharded pipelined application of a :class:`RotationSequence`.
 
     Drift-coordinate scheme: each band's sweep emits its output shifted
     right by ``delta = k_b - 1`` state columns (the wavefront's natural
@@ -148,6 +194,13 @@ def rot_sequence_column_sharded(A, C, S, mesh, *, col_axis: str = "model",
     for the public wrapper): global width ``W = D * n_loc`` with
     ``n_loc = T_loc * n_b``, ``T_loc >= 2`` and ``W >= n + B * (k_b - 1)``.
     """
+    seq, mesh = _coerce_sequence(seq, args, mesh,
+                                 "rot_sequence_column_sharded")
+    C, S = seq.cos, seq.sin
+    if seq.sign is not None or seq.reflect:
+        raise ValueError(
+            "column-sharded pipeline supports plain rotation sequences "
+            "only (no per-entry signs / reflectors)")
     m, W = A.shape
     J, k = C.shape
     D = mesh.shape[col_axis]
@@ -238,14 +291,16 @@ def rot_sequence_column_sharded(A, C, S, mesh, *, col_axis: str = "model",
     return fn(A, C, S)
 
 
-def rot_sequence_column_sharded_padded(A, C, S, mesh, *,
+def rot_sequence_column_sharded_padded(A, seq, *args, mesh=None,
                                        col_axis: str = "model",
                                        n_b: int = 64, k_b: int = 16,
                                        row_axes=(),
                                        method: str = "blocked"):
     """Public wrapper: pads ``A`` for drift + divisibility, slices back."""
+    seq, mesh = _coerce_sequence(seq, args, mesh,
+                                 "rot_sequence_column_sharded_padded")
     m, n = A.shape
-    J, k = C.shape
+    J, k = seq.shape
     assert J == n - 1
     D = mesh.shape[col_axis]
     delta = k_b - 1
@@ -256,7 +311,7 @@ def rot_sequence_column_sharded_padded(A, C, S, mesh, *,
     W = D * n_loc
     Ap = jnp.pad(A, ((0, 0), (0, W - n)))
     out = rot_sequence_column_sharded(
-        Ap, C, S, mesh, col_axis=col_axis, n_b=n_b, k_b=k_b,
+        Ap, seq, mesh, col_axis=col_axis, n_b=n_b, k_b=k_b,
         row_axes=row_axes, method=method,
     )
     return jax.lax.slice_in_dim(out, B * delta, B * delta + n, axis=1)

@@ -35,6 +35,12 @@ class JacobiResult(NamedTuple):
     sign: jax.Array         # (n-1, K) +1 reflector pivot / -1 no-op rotation
     off_norm: jax.Array     # final off-diagonal Frobenius norm
 
+    def rotation_sequence(self):
+        """The recorded pivots as a first-class ``RotationSequence``."""
+        from .sequence import RotationSequence
+
+        return RotationSequence(self.cos, self.sin, self.sign)
+
 
 def _wave_pairs(n: int, parity):
     """Mask of valid pivot positions ``j`` for a wave of given parity."""
@@ -139,16 +145,18 @@ def jacobi_apply_basis(res: JacobiResult, M=None, *, method="auto",
 
     ``jacobi_apply_basis(res)`` returns the eigenvector matrix ``V``;
     ``jacobi_apply_basis(res, G)`` computes ``G @ V`` without forming ``V``
-    — the paper's "delayed sequence" application.  Dispatch goes through
-    the backend registry: the default ``method="auto"`` lets the cost
-    model + plan cache pick the backend and tiles for this shape (the
+    — the paper's "delayed sequence" application.  The recorded pivots
+    travel as a ``RotationSequence``; dispatch goes through
+    ``seq.plan``: the default ``method="auto"`` lets the cost model +
+    plan cache pick the backend and tiles for this shape (the
     sign-carrying sequence restricts it to the blocked family); a named
     method keeps the seed defaults ``n_b=64, k_b=16``.
     """
-    from .api import apply_rotation_sequence
-
-    n = res.cos.shape[0] + 1
+    seq = res.rotation_sequence()
     if M is None:
-        M = jnp.eye(n, dtype=res.cos.dtype)
-    return apply_rotation_sequence(M, res.cos, res.sin, method=method,
-                                   n_b=n_b, k_b=k_b, G=res.sign, **kw)
+        M = jnp.eye(seq.n, dtype=res.cos.dtype)
+    # apply_direct keeps the backend's native autodiff (gradients w.r.t.
+    # the recorded waves stay exact, as before the typed migration); the
+    # constant-sequence custom_vjp is opt-in via seq.plan(...).apply
+    return seq.plan(like=M, method=method, n_b=n_b, k_b=k_b,
+                    **kw).apply_direct(M)

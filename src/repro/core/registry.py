@@ -90,7 +90,10 @@ class Plan:
     k_b: Optional[int] = None
     m_blk: Optional[int] = None
     est_seconds: float = float("inf")
-    source: str = "model"  # "model" | "measured" | "cache"
+    # "model" (cost-model ranked) | "measured" (autotuned this process) |
+    # "persisted" (measured, loaded from disk) | "interpolated" (borrowed
+    # from the nearest measured shape)
+    source: str = "model"
 
     def kwargs(self) -> dict:
         kw = {}
@@ -448,6 +451,53 @@ def load_plan_cache(path: Optional[str] = None) -> int:
     return loaded
 
 
+# Maximum summed |log(m/m')| + |log(n/n')| + |log(k/k')| at which a
+# measured plan still transfers: ~4x per dimension on average.  Beyond
+# this the regime can differ qualitatively (cache-resident vs streaming,
+# VPU- vs MXU-bound) and the cost model is the better guess.
+_INTERP_MAX_LOGDIST = 3 * math.log(4.0)
+
+
+def _interpolated_plan(problem: Problem, key: tuple) -> Optional[Plan]:
+    """Borrow the nearest *measured* plan for an unmeasured shape.
+
+    Autotuned timings are expensive; rather than re-running the cost
+    model for a shape we have never measured, reuse the closest measured
+    (or disk-persisted) plan of the same eligibility class — identical
+    ``(dtype, platform, signs, sharded)`` and a backend this problem is
+    itself eligible for — ranked by log-distance in ``(m, n, k)`` and
+    only within :data:`_INTERP_MAX_LOGDIST` (a far-away measurement
+    must not override the cost model).  Borrowed plans are cached under
+    the new key with ``source="interpolated"`` (never persisted, and
+    upgraded in place by a later ``autotune=True`` call).
+    """
+    eligible = {spec.name for spec in eligible_backends(problem)}
+    best: Optional[Plan] = None
+    best_dist = _INTERP_MAX_LOGDIST
+    for cached_key, plan in _PLAN_CACHE.items():
+        if plan.source not in _PERSISTED_SOURCES:
+            continue
+        m2, n2, k2 = cached_key[:3]
+        if cached_key[3:] != key[3:]:  # (dtype, platform, signs, sharded)
+            continue
+        if plan.method not in eligible:
+            continue
+        if min(m2, n2, k2) < 1:
+            continue
+        dist = (abs(math.log(problem.m / m2))
+                + abs(math.log(problem.n / n2))
+                + abs(math.log(problem.k / k2)))
+        if dist < best_dist:
+            best, best_dist = plan, dist
+    if best is None:
+        return None
+    # the donor's measured wall-time belongs to the donor's shape; carry
+    # the cost model's estimate for *this* problem instead
+    borrowed = dataclasses.replace(best, source="interpolated")
+    est = get_backend(best.method).cost(problem, borrowed)
+    return dataclasses.replace(borrowed, est_seconds=est)
+
+
 def _modeled_plans(problem: Problem) -> List[Plan]:
     """All eligible (backend, tile) plans, costed and sorted ascending."""
     plans: List[Plan] = []
@@ -505,6 +555,13 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     ``(m, n, k, dtype, platform, signs, sharded)`` — an autotuned
     (measured) entry overwrites a model-ranked one for the same key and
     is then reused by plain ``method="auto"`` calls too.
+
+    Unmeasured shapes first try **cross-shape interpolation**: the
+    nearest measured/persisted plan of the same eligibility class
+    (identical dtype/platform/signs/sharded, eligible backend) by
+    ``(m, n, k)`` log-distance is borrowed (``source="interpolated"``)
+    before the cost model is re-run, so autotune work transfers to
+    neighbouring problem sizes.
     """
     import jax.numpy as jnp
 
@@ -535,6 +592,11 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
 
     problem = Problem(m=m, n=n, k=k, dtype=dtype, platform=platform,
                       signs=signs, sharded=sharded)
+    if not autotune:
+        borrowed = _interpolated_plan(problem, key)
+        if borrowed is not None:
+            _PLAN_CACHE[key] = borrowed
+            return borrowed
     plans = _modeled_plans(problem)
     if not plans:
         raise ValueError(

@@ -20,11 +20,11 @@ instead of special-casing the startup/shutdown triangles of the wavefront
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.sequence import RotationSequence
 
 __all__ = [
     "RotationSequence",
@@ -33,25 +33,6 @@ __all__ = [
     "identity_sequence",
     "sequence_to_dense",
 ]
-
-
-class RotationSequence(NamedTuple):
-    """A sequence of ``(n-1) * k`` plane rotations in the paper's layout."""
-
-    cos: jax.Array  # (n-1, k)
-    sin: jax.Array  # (n-1, k)
-
-    @property
-    def n(self) -> int:
-        return self.cos.shape[0] + 1
-
-    @property
-    def k(self) -> int:
-        return self.cos.shape[1]
-
-    @property
-    def dtype(self):
-        return self.cos.dtype
 
 
 def givens(a, b):
@@ -75,30 +56,36 @@ def random_sequence(key, n: int, k: int, dtype=jnp.float32) -> RotationSequence:
 
 
 def identity_sequence(n: int, k: int, dtype=jnp.float32) -> RotationSequence:
-    return RotationSequence(
-        jnp.ones((n - 1, k), dtype), jnp.zeros((n - 1, k), dtype)
-    )
+    return RotationSequence.identity(n, k, dtype)
 
 
-def sequence_to_dense(seq: RotationSequence, reflect: bool = False) -> np.ndarray:
+def sequence_to_dense(seq: RotationSequence,
+                      reflect: bool | None = None) -> np.ndarray:
     """Accumulate the whole sequence into a dense ``n x n`` orthogonal matrix.
 
     ``A @ Q`` equals applying the sequence to ``A``.  Pure numpy; used by
-    tests and by small-scale accumulation oracles.
+    tests and by small-scale accumulation oracles.  ``reflect=None``
+    honours the sequence's own ``reflect`` flag and per-entry ``sign``
+    array; an explicit boolean overrides both (legacy behaviour).
     """
     cos = np.asarray(seq.cos, dtype=np.float64)
     sin = np.asarray(seq.sin, dtype=np.float64)
+    sign = getattr(seq, "sign", None)
+    if reflect is None:
+        reflect = bool(getattr(seq, "reflect", False))
+    else:
+        sign = None
+    if sign is not None:
+        g_all = np.asarray(sign, dtype=np.float64)
+    else:
+        g_all = np.full(cos.shape, 1.0 if reflect else -1.0)
     n = cos.shape[0] + 1
     q = np.eye(n)
     for p in range(cos.shape[1]):
         for j in range(n - 1):
-            c, s = cos[j, p], sin[j, p]
+            c, s, g = cos[j, p], sin[j, p], g_all[j, p]
             x = q[:, j].copy()
             y = q[:, j + 1].copy()
-            if reflect:
-                q[:, j] = c * x + s * y
-                q[:, j + 1] = s * x - c * y
-            else:
-                q[:, j] = c * x + s * y
-                q[:, j + 1] = -s * x + c * y
+            q[:, j] = c * x + s * y
+            q[:, j + 1] = g * (s * x - c * y)
     return q

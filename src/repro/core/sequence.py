@@ -1,0 +1,503 @@
+"""First-class rotation sequences: plan-once / apply-many.
+
+The paper's central object is not a matrix but a *sequence of planar
+rotations* — recorded once in the packed ``(n-1, K)`` C/S wave layout,
+then applied many times with blocked or accumulated kernels.  This
+module makes that object a real type:
+
+* :class:`RotationSequence` — a frozen dataclass holding ``cos``/``sin``
+  waves, an optional per-entry ``sign`` array (mixed rotation/reflector
+  sequences, paper SS8.4), and a ``reflect`` flag.  It is registered as
+  a JAX **pytree**, so sequences pass through ``jit``/``vmap``/``grad``
+  and ``shard_map`` like any array.  Constructors
+  (:meth:`~RotationSequence.from_waves`,
+  :meth:`~RotationSequence.from_pairs`,
+  :meth:`~RotationSequence.identity`) validate the wave layout and can
+  repair ``c^2 + s^2 = 1`` drift.
+
+* **Composition semantics** — ``seq.T`` is the exact inverse (reversed
+  waves, transposed planes), ``seq1 @ seq2`` concatenates along ``K``
+  ("apply seq1, then seq2"), ``seq[i:j]`` slices waves, and
+  :meth:`~RotationSequence.pad_to` identity-pads to a target ``K`` so
+  repeated applications present plan-cache-stable shapes.
+
+* **Two-phase execution** — ``plan = seq.plan(like=A)`` resolves the
+  backend registry *once* (capability filter + SS6 cost model + plan
+  cache, or measured autotune) into a frozen :class:`SequencePlan`;
+  ``plan.apply(A)`` then calls the chosen backend directly, with no
+  registry lookup on the hot path.  ``seq.apply(A)`` is the one-shot
+  convenience composing both.
+
+* **Autodiff** — application is linear in ``A``, so its VJP is exactly
+  one application of the *transposed* sequence: ``custom_vjp`` on the
+  planned apply makes ``jax.grad`` work through any backend (including
+  Pallas kernels) at the cost of one extra sequence application — no
+  unrolled rotation tape.  The sequence itself is treated as a constant
+  (its cotangents are symbolically zero); differentiate the *recording*
+  step instead if you need angle gradients.
+
+Transpose math: one plane transform is ``M(c, s, g) = [[c, g s], [s,
+-g c]]`` acting on columns ``(j, j+1)`` (``g = -1`` rotation, ``g = +1``
+reflector).  ``M^T = M(c, g s, g)`` on the *same* column pair, so the
+inverse applies the per-plane transposes in reversed total order; that
+order re-packs into the wave-major layout as an anti-diagonal staircase
+(see :attr:`RotationSequence.T`), the same pipelining trick the eig
+recorders use for their descending elimination sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+
+__all__ = ["RotationSequence", "SequencePlan"]
+
+
+# sign value of the unified update ``y' = g * (s x - c y)``
+_ROT = -1.0      # plain rotation (identity padding is a no-op)
+_REFL = 1.0      # 2x2 reflector (paper SS8.4)
+
+# relative drift of c^2 + s^2 (in ulps of the wave dtype) above which
+# from_waves(normalize="auto") renormalizes an entry (exact pairs pass
+# through bit-for-bit)
+_DRIFT_ULPS = 64
+
+
+def _ensure_backends() -> None:
+    """Planning needs the backend registry populated (api.py does it)."""
+    import repro.core.api  # noqa: F401  (import side effect: registration)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class RotationSequence:
+    """A sequence of ``(n-1) * k`` planar rotations in the paper's layout.
+
+    ``cos``/``sin`` have shape ``(n-1, k)``: entry ``(j, p)`` acts on
+    columns ``(j, j+1)`` of the target during wave ``p`` (wave-major
+    order, ascending ``j`` within a wave).  ``sign`` is an optional
+    per-entry array mixing rotations (``-1``) and 2x2 reflectors
+    (``+1``); ``reflect=True`` marks an all-reflector sequence without
+    materializing the array.
+
+    Registered as a JAX pytree: ``cos``/``sin``/``sign`` are children,
+    ``reflect`` is static aux data.
+    """
+
+    cos: Any
+    sin: Any
+    sign: Any = None
+    reflect: bool = False
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.cos, self.sin, self.sign), (self.reflect,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        cos, sin, sign = children
+        return cls(cos, sin, sign, aux[0])
+
+    # -- shape / dtype -----------------------------------------------------
+    @property
+    def n(self) -> int:
+        """Width of a compatible target matrix (``planes + 1``)."""
+        return self.cos.shape[0] + 1
+
+    @property
+    def k(self) -> int:
+        """Number of waves."""
+        return self.cos.shape[1]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return tuple(self.cos.shape)
+
+    @property
+    def dtype(self):
+        return self.cos.dtype
+
+    def __repr__(self) -> str:
+        return (f"RotationSequence(n={self.n}, k={self.k}, "
+                f"dtype={getattr(self.cos, 'dtype', '?')}, "
+                f"sign={'per-entry' if self.sign is not None else None}, "
+                f"reflect={self.reflect})")
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_waves(cls, cos, sin, sign=None, *, reflect: bool = False,
+                   normalize: str | bool = "auto") -> "RotationSequence":
+        """Build from ``(n-1, k)`` wave arrays, validating the layout.
+
+        ``normalize``: ``"auto"`` (default) renormalizes only entries
+        whose ``c^2 + s^2`` drifts from 1 by more than ~64 ulp — exact
+        pairs pass through bit-for-bit; ``True`` always divides by
+        ``hypot(c, s)``; ``False`` stores the arrays untouched.
+        """
+        cos = jnp.asarray(cos)
+        sin = jnp.asarray(sin)
+        if cos.ndim != 2:
+            raise ValueError(f"waves must be 2D (n-1, k), got {cos.shape}")
+        if cos.shape != sin.shape:
+            raise ValueError(
+                f"cos/sin shape mismatch: {cos.shape} vs {sin.shape}")
+        if sign is not None:
+            sign = jnp.asarray(sign)
+            if sign.shape != cos.shape:
+                raise ValueError(
+                    f"sign shape {sign.shape} != wave shape {cos.shape}")
+        if normalize == "auto":
+            r2 = cos * cos + sin * sin
+            tol = _DRIFT_ULPS * jnp.finfo(
+                r2.dtype if jnp.issubdtype(r2.dtype, jnp.floating)
+                else jnp.float32).eps
+            drift = jnp.abs(r2 - 1.0) > jnp.asarray(tol, r2.dtype)
+            r = jnp.sqrt(jnp.where(r2 > 0, r2, 1.0))
+            # a (0, 0) pair has no direction to rescale: repair it to the
+            # identity rotation, like normalize=True does
+            cos = jnp.where(drift, jnp.where(r2 > 0, cos / r, 1.0), cos)
+            sin = jnp.where(drift, jnp.where(r2 > 0, sin / r, 0.0), sin)
+        elif normalize:
+            r = jnp.hypot(cos, sin)
+            safe = r > 0
+            rs = jnp.where(safe, r, 1.0)
+            cos = jnp.where(safe, cos / rs, 1.0)
+            sin = jnp.where(safe, sin / rs, 0.0)
+        return cls(cos, sin, sign, reflect)
+
+    @classmethod
+    def from_pairs(cls, waves, *, reflect: bool = False) -> "RotationSequence":
+        """Build from an iterable of per-wave columns.
+
+        Each element is ``(c, s)`` or ``(c, s, g)`` with 1D arrays of a
+        common length ``n-1``; waves are stacked along ``K`` in order.
+        ``g`` columns may be ``None`` (all-rotation wave); if any wave
+        carries signs the missing ones are filled with rotations.
+        """
+        waves = list(waves)
+        if not waves:
+            raise ValueError("from_pairs needs at least one wave; use "
+                             "RotationSequence.identity for an empty one")
+        cs, ss, gs = [], [], []
+        for w in waves:
+            c, s, g = (*w, None) if len(w) == 2 else w
+            c = jnp.asarray(c).reshape(-1)
+            s = jnp.asarray(s).reshape(-1)
+            cs.append(c)
+            ss.append(s)
+            gs.append(None if g is None else jnp.asarray(g).reshape(-1))
+        planes = cs[0].shape[0]
+        for c, s in zip(cs, ss):
+            if c.shape[0] != planes or s.shape[0] != planes:
+                raise ValueError(
+                    f"inconsistent wave lengths: {c.shape[0]} vs {planes}")
+        sign = None
+        if any(g is not None for g in gs):
+            fill = jnp.full((planes,), _REFL if reflect else _ROT,
+                            cs[0].dtype)
+            sign = jnp.stack([fill if g is None else g for g in gs], axis=1)
+        return cls.from_waves(jnp.stack(cs, axis=1), jnp.stack(ss, axis=1),
+                              sign, reflect=reflect, normalize=False)
+
+    @classmethod
+    def identity(cls, n: int, k: int, dtype=jnp.float32) -> "RotationSequence":
+        """``k`` identity waves on ``n`` columns (exact no-op)."""
+        return cls(jnp.ones((n - 1, k), dtype), jnp.zeros((n - 1, k), dtype))
+
+    # -- composition -------------------------------------------------------
+    @property
+    def T(self) -> "RotationSequence":
+        """The inverse sequence: ``seq.T.apply(seq.apply(A)) == A`` in
+        exact arithmetic.
+
+        ``Q^T`` is the product of per-plane transposes (``M(c, s, g)^T =
+        M(c, g s, g)`` — each staying on its own column pair ``(j,
+        j+1)``) in *reversed* total order.  Reversed wave-major order
+        means descending ``j`` within descending ``p``, which re-packs
+        into the wave-major layout as an anti-diagonal staircase: the
+        rotation from ``(j, p)`` lands in wave ``q = (n-2-j) +
+        (k-1-p)``, giving an ``(n-1, n+k-2)`` grid with identity
+        padding off the staircase (``seq.T.T`` therefore applies the
+        same transform as ``seq``, identity-padded wider).
+        """
+        cos, sin, sign = self.cos, self.sin, self.sign
+        J, k = cos.shape
+        if sign is None:
+            s_signed = sin if self.reflect else -sin
+        else:
+            s_signed = jnp.where(sign > 0, sin, -sin)
+        j = jnp.arange(J)[:, None]
+        q = jnp.arange(J + k - 1)[None, :]
+        p_idx = (J - 1 - j) + (k - 1) - q
+        valid = (p_idx >= 0) & (p_idx < k)
+        pc = jnp.clip(p_idx, 0, k - 1)
+        jb = jnp.broadcast_to(j, pc.shape)
+        c_t = jnp.where(valid, cos[jb, pc], jnp.ones((), cos.dtype))
+        s_t = jnp.where(valid, s_signed[jb, pc], jnp.zeros((), sin.dtype))
+        g_t = None
+        if sign is not None:
+            g_t = jnp.where(valid, sign[jb, pc],
+                            jnp.asarray(_ROT, sign.dtype))
+        elif self.reflect:
+            # identity padding must stay a rotation no-op (a padded
+            # reflector has det -1), so materialize the sign grid
+            g_t = jnp.where(valid, jnp.asarray(_REFL, cos.dtype),
+                            jnp.asarray(_ROT, cos.dtype))
+        return RotationSequence(c_t, s_t, g_t,
+                                False if g_t is not None else self.reflect)
+
+    def __matmul__(self, other: "RotationSequence") -> "RotationSequence":
+        """Concatenate along ``K``: applying ``seq1 @ seq2`` equals
+        applying ``seq1`` then ``seq2`` (``A @ Q1 @ Q2``)."""
+        if not isinstance(other, RotationSequence):
+            return NotImplemented
+        if self.cos.shape[0] != other.cos.shape[0]:
+            raise ValueError(
+                f"cannot compose sequences on {self.n} and {other.n} columns")
+        cos = jnp.concatenate([self.cos, other.cos], axis=1)
+        sin = jnp.concatenate([self.sin, other.sin], axis=1)
+        if (self.sign is None and other.sign is None
+                and self.reflect == other.reflect):
+            return RotationSequence(cos, sin, None, self.reflect)
+        return RotationSequence(
+            cos, sin,
+            jnp.concatenate([self._sign_array(), other._sign_array()],
+                            axis=1),
+            False)
+
+    def __getitem__(self, idx) -> "RotationSequence":
+        """Wave slicing: ``seq[i:j]`` keeps waves ``i..j-1``."""
+        if not isinstance(idx, slice):
+            raise TypeError(
+                "RotationSequence supports wave *slices* only (seq[i:j]); "
+                "a single wave is seq[p:p+1]")
+        return RotationSequence(
+            self.cos[:, idx], self.sin[:, idx],
+            None if self.sign is None else self.sign[:, idx], self.reflect)
+
+    def pad_to(self, k_target: int) -> "RotationSequence":
+        """Identity-pad to ``k_target`` waves (plan-cache-stable shapes).
+
+        Padding waves are exact no-op *rotations*; an all-reflector
+        sequence therefore materializes its ``sign`` array (a padded
+        reflector would not be a no-op — det is -1).
+        """
+        pad = k_target - self.k
+        if pad < 0:
+            raise ValueError(f"cannot pad {self.k} waves down to {k_target}")
+        if pad == 0:
+            return self
+        planes = self.cos.shape[0]
+        cos = jnp.concatenate(
+            [self.cos, jnp.ones((planes, pad), self.cos.dtype)], axis=1)
+        sin = jnp.concatenate(
+            [self.sin, jnp.zeros((planes, pad), self.sin.dtype)], axis=1)
+        if self.sign is None and not self.reflect:
+            return RotationSequence(cos, sin, None, False)
+        sign = jnp.concatenate(
+            [self._sign_array(),
+             jnp.full((planes, pad), _ROT, self.cos.dtype)], axis=1)
+        return RotationSequence(cos, sin, sign, False)
+
+    def _sign_array(self):
+        """Materialized per-entry sign array (``reflect`` folded in)."""
+        if self.sign is not None:
+            return self.sign
+        return jnp.full(self.cos.shape, _REFL if self.reflect else _ROT,
+                        self.cos.dtype)
+
+    # -- execution ---------------------------------------------------------
+    def plan(self, like=None, *, m: Optional[int] = None,
+             method: str = "auto", autotune: bool = False,
+             platform: Optional[str] = None, sharded: bool = False,
+             n_b: Optional[int] = None, k_b: Optional[int] = None,
+             **kw) -> "SequencePlan":
+        """Resolve the registry once into a frozen :class:`SequencePlan`.
+
+        ``like`` (an array or ShapeDtypeStruct) supplies the target row
+        count and dtype; ``m`` overrides the row count.  ``method="auto"``
+        runs capability filtering + the SS6 cost model (or measured
+        ``autotune``) through the per-shape plan cache; a named method
+        keeps the seed defaults (``n_b=64, k_b=16`` for tiled backends).
+        Explicit ``n_b``/``k_b`` always override the planned tiles.
+        """
+        _ensure_backends()
+        if m is None:
+            m = like.shape[0] if like is not None else max(self.n, 1)
+        dtype = getattr(like, "dtype", None) or self.dtype
+        n, k = self.n, self.k
+        if method != "auto":
+            # validate the method name + sign capability even when the
+            # sequence is empty, so typos never silently "succeed"
+            spec = registry.get_backend(method)  # raises on unknown
+            if self.sign is not None and not spec.capability.supports_signs:
+                raise ValueError(
+                    f"method {method!r} does not support per-entry signs; "
+                    f"use a blocked-family backend")
+        if n < 2 or k < 1 or m < 1:
+            return SequencePlan(self, _IDENTITY, (), None)
+
+        if method == "auto":
+            plan = registry.select_plan(
+                m, n, k, dtype=dtype, platform=platform,
+                signs=self.sign is not None, sharded=sharded,
+                autotune=autotune)
+            planned = plan.kwargs()
+            if n_b is not None:
+                planned["n_b"] = n_b
+            if k_b is not None:
+                planned["k_b"] = k_b
+            planned.update(kw)
+            return SequencePlan(self, plan.method,
+                                tuple(sorted(planned.items())), plan)
+
+        planned = dict(kw)
+        if spec.candidates is not registry.no_tiles:  # tiled backend
+            planned["n_b"] = 64 if n_b is None else n_b  # seed defaults
+            planned["k_b"] = 16 if k_b is None else k_b
+        return SequencePlan(self, method, tuple(sorted(planned.items())),
+                            None)
+
+    def apply(self, A, *, method: str = "auto", **kw):
+        """One-shot convenience: ``seq.plan(like=A, ...).apply(A)``.
+
+        For repeated applications at a fixed shape, hold the plan — that
+        is the whole point of the two-phase API.
+        """
+        return self.plan(like=A, method=method, **kw).apply(A)
+
+
+# sentinel backend name for degenerate (zero-rotation) plans
+_IDENTITY = "identity"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SequencePlan:
+    """A frozen dispatch decision bound to one :class:`RotationSequence`.
+
+    ``apply(A)`` calls the resolved backend directly — no registry
+    lookup, no plan-cache probe — and is differentiable w.r.t. ``A``
+    (``custom_vjp``: the cotangent is one application of the transposed
+    sequence).  Rebind the same decision to fresh waves of the same
+    shape with :meth:`rebind` (the delayed-buffer hot path).
+    """
+
+    sequence: RotationSequence
+    method: str
+    kwargs: Tuple[Tuple[str, Any], ...]
+    plan: Optional[registry.Plan] = None
+
+    def __repr__(self) -> str:
+        return (f"SequencePlan(method={self.method!r}, "
+                f"kwargs={dict(self.kwargs)}, seq={self.sequence!r})")
+
+    def apply(self, A):
+        """Apply the planned sequence: ``A <- A @ Q`` on the hot path.
+
+        Differentiable w.r.t. ``A`` through every backend via the
+        transposed-sequence ``custom_vjp``; the sequence arrays are
+        treated as constants (zero cotangents).  Use
+        :meth:`apply_direct` for the backend's native JAX autodiff.
+
+        Backward-pass cost: ``seq.T`` re-packs ``k`` waves into an
+        ``n + k - 2``-wave staircase, so one VJP costs roughly
+        ``(n + k) / k`` forward applications — cheap for wide recordings
+        (``k >~ n``), noticeable for small ``k``; prefer
+        :meth:`apply_direct` for grad-heavy small-``k`` jnp workloads
+        (a padding-free transpose kernel is a ROADMAP item).
+        """
+        self._check_target(A)
+        if self.method == _IDENTITY:
+            return A
+        seq = self.sequence
+        return _apply_planned(self.method, self.kwargs, seq.reflect,
+                              A, seq.cos, seq.sin, seq.sign)
+
+    __call__ = apply
+
+    def apply_direct(self, A):
+        """Apply via the backend with no ``custom_vjp`` wrapping.
+
+        Differentiation (where the backend supports it — the pure-jnp
+        family) goes through the actual computation, so gradients
+        w.r.t. the wave arrays are exact rather than symbolically zero.
+        The compat wrapper ``apply_rotation_sequence`` uses this path to
+        preserve the seed's autodiff semantics.
+        """
+        self._check_target(A)
+        if self.method == _IDENTITY:
+            return A
+        seq = self.sequence
+        return _run_backend(self.method, self.kwargs, seq.reflect,
+                            A, seq.cos, seq.sin, seq.sign)
+
+    def _check_target(self, A):
+        if self.method == _IDENTITY:
+            return
+        if A.ndim != 2 or A.shape[1] != self.sequence.n:
+            raise ValueError(
+                f"plan built for n={self.sequence.n} targets; "
+                f"got A.shape={A.shape}")
+
+    def rebind(self, sequence: RotationSequence) -> "SequencePlan":
+        """Bind this (method, tiles) decision to a new same-shape sequence."""
+        old = self.sequence
+        if sequence.shape != old.shape:
+            raise ValueError(
+                f"rebind needs matching wave shape {old.shape}; "
+                f"got {sequence.shape}")
+        if (sequence.sign is None) != (old.sign is None) and \
+                self.method != _IDENTITY:
+            spec = registry.get_backend(self.method)
+            if sequence.sign is not None and \
+                    not spec.capability.supports_signs:
+                raise ValueError(
+                    f"plan method {self.method!r} cannot carry per-entry "
+                    f"signs; re-plan the sign-carrying sequence")
+        return dataclasses.replace(self, sequence=sequence)
+
+
+# --------------------------------------------------------------------------
+# planned application with a transposed-sequence VJP
+# --------------------------------------------------------------------------
+
+def _run_backend(method: str, kwargs: Tuple[Tuple[str, Any], ...],
+                 reflect: bool, A, C, S, G):
+    spec = registry.get_backend(method)
+    return spec.fn(A, C, S, reflect=reflect, G=G, **dict(kwargs))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _apply_planned(method, kwargs, reflect, A, C, S, G):
+    return _run_backend(method, kwargs, reflect, A, C, S, G)
+
+
+def _apply_planned_fwd(method, kwargs, reflect, A, C, S, G):
+    out = _run_backend(method, kwargs, reflect, A, C, S, G)
+    return out, (C, S, G)
+
+
+def _apply_planned_bwd(method, kwargs, reflect, residuals, dY):
+    C, S, G = residuals
+    seq_t = RotationSequence(C, S, G, reflect).T
+    bwd_method, bwd_kwargs = method, kwargs
+    if seq_t.sign is not None and \
+            not registry.get_backend(method).capability.supports_signs:
+        # transposing an all-reflector sequence materializes a mixed
+        # sign grid; route the cotangent through the blocked family
+        bwd_method, bwd_kwargs = "blocked", tuple(
+            (key, val) for key, val in kwargs if key in ("n_b", "k_b"))
+    dA = _run_backend(bwd_method, bwd_kwargs, seq_t.reflect,
+                      dY, seq_t.cos, seq_t.sin, seq_t.sign)
+    # The sequence is a constant of the application (symbolic-zero
+    # cotangents): exact angle gradients would need the rotation tape.
+    return (dA, jnp.zeros_like(C), jnp.zeros_like(S),
+            None if G is None else jnp.zeros_like(G))
+
+
+_apply_planned.defvjp(_apply_planned_fwd, _apply_planned_bwd)

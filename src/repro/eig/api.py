@@ -30,6 +30,8 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from repro.core.sequence import RotationSequence
+
 from .delayed import DelayedRotationBuffer
 from .qr_shift import tridiag_qr
 from .svd import bidiag_qr, bidiagonalize
@@ -102,8 +104,10 @@ def eigh_givens(A, *, method: str = "qr", k_delay: int = 32,
     _warn_unconverged("eigh_givens", qr.converged, qr.sweeps)
     buf = DelayedRotationBuffer(jnp.eye(n, dtype=dtype), k_delay=k_delay,
                                 method=apply_method, autotune=autotune)
-    buf.push_sequence(tri.cos, tri.sin)   # V = Q_tri @ U_qr, one stream
-    buf.push_sequence(qr.cos, qr.sin)
+    # V = Q_tri @ U_qr: both recordings share the (n-1, .) plane layout,
+    # so they stream through the buffer as one composed sequence
+    buf.push_sequence(RotationSequence(tri.cos, tri.sin))
+    buf.push_sequence(RotationSequence(qr.cos, qr.sin))
     V = buf.value
     order = np.argsort(qr.eigenvalues, kind="stable")
     w = jnp.asarray(qr.eigenvalues[order], dtype)
@@ -144,14 +148,15 @@ def svd_givens(A, *, k_delay: int = 32, apply_method: str = "auto",
     # embed the latter with identity padding below plane n-2
     buf_u = DelayedRotationBuffer(jnp.eye(m, dtype=dtype), k_delay=k_delay,
                                   method=apply_method, autotune=autotune)
-    buf_u.push_sequence(bd.cos_left, bd.sin_left)
-    buf_u.push_sequence(_embed_planes(qr.cos_left, m - 1, 1.0),
-                        _embed_planes(qr.sin_left, m - 1, 0.0))
+    buf_u.push_sequence(RotationSequence(bd.cos_left, bd.sin_left))
+    buf_u.push_sequence(RotationSequence(
+        _embed_planes(qr.cos_left, m - 1, 1.0),
+        _embed_planes(qr.sin_left, m - 1, 0.0)))
     U = buf_u.value
     buf_v = DelayedRotationBuffer(jnp.eye(n, dtype=dtype), k_delay=k_delay,
                                   method=apply_method, autotune=autotune)
-    buf_v.push_sequence(bd.cos_right, bd.sin_right)
-    buf_v.push_sequence(qr.cos_right, qr.sin_right)
+    buf_v.push_sequence(RotationSequence(bd.cos_right, bd.sin_right))
+    buf_v.push_sequence(RotationSequence(qr.cos_right, qr.sin_right))
     V = buf_v.value
 
     # sign fix + descending sort are column ops on the accumulated

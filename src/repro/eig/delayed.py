@@ -5,18 +5,22 @@ time (bulge chasing is inherently sequential) but *apply* them to the
 eigen/singular-vector accumulators in bulk: a
 :class:`DelayedRotationBuffer` holds the accumulator matrix and queues
 recorded waves until ``k_delay`` of them are pending, then flushes the
-whole batch through one registry-dispatched
-``apply_rotation_sequence(method="auto")`` call.  This converts the
-accumulation flops from ``K`` rank-2 column updates into
-``K / k_delay`` blocked/accumulated (or Pallas) applications — the
-paper's "delayed sequences of rotations" use case, and the reason the
-solvers' hot path runs on the optimized kernels.
+whole batch as one :class:`~repro.core.sequence.RotationSequence`
+through a **cached** :class:`~repro.core.sequence.SequencePlan` — the
+registry (capability filter + cost model + plan cache, or measured
+autotune) is consulted on the *first* flush only; every later flush
+rebinds the frozen plan to the fresh waves and calls the chosen backend
+directly.  This converts the accumulation flops from ``K`` rank-2
+column updates into ``K / k_delay`` blocked/accumulated (or Pallas)
+applications — the paper's "delayed sequences of rotations" use case —
+and makes plan-once/apply-many the structural invariant rather than a
+cache accident.
 
-Partial final batches are padded with identity waves (``c=1, s=0`` is an
-*exact* no-op, the same trick the blocked appliers use for wavefront
+Partial final batches are identity-padded
+(:meth:`~repro.core.sequence.RotationSequence.pad_to`; ``c=1, s=0`` is
+an *exact* no-op, the same trick the blocked appliers use for wavefront
 triangles) so every flush presents the same ``(n-1, k_delay)`` problem
-shape — one plan-cache entry per accumulator, planned once (or autotuned
-once, persisting to the on-disk plan cache) and reused for every flush.
+shape and reuses the same frozen plan.
 """
 from __future__ import annotations
 
@@ -32,10 +36,11 @@ class DelayedRotationBuffer:
       M: initial accumulator ``(m, n)`` (e.g. an identity basis).
       k_delay: waves buffered per flush (the SS5.1 delay depth).
       method: dispatch method for the flush; ``"auto"`` consults the
-        registry cost model + plan cache.
-      autotune: measure candidate plans on first flush (``auto`` only).
-      apply_kw: extra kwargs forwarded to ``apply_rotation_sequence``
-        (e.g. explicit ``n_b``/``k_b`` overrides).
+        registry cost model + plan cache (once — see ``plan``).
+      autotune: measure candidate plans when first resolving the flush
+        plan (``auto`` only).
+      apply_kw: extra plan kwargs (e.g. explicit ``n_b``/``k_b``
+        overrides) forwarded to ``RotationSequence.plan``.
     """
 
     def __init__(self, M, *, k_delay: int = 32, method: str = "auto",
@@ -59,6 +64,9 @@ class DelayedRotationBuffer:
         self._c: list = []
         self._s: list = []
         self._g: list = []  # per-wave sign columns; None = all-rotation
+        # frozen SequencePlan per flush signature (k_padded, signs) —
+        # resolved once, rebound to fresh waves on every later flush
+        self._plans: dict = {}
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (f"DelayedRotationBuffer(shape={tuple(self._M.shape)}, "
@@ -86,44 +94,70 @@ class DelayedRotationBuffer:
             self.flush()
         return self
 
-    def push_sequence(self, C, S, G=None) -> "DelayedRotationBuffer":
-        """Queue every wave (column) of ``C``/``S`` in order."""
-        C = np.asarray(C)
-        S = np.asarray(S)
+    def push_sequence(self, seq, S=None, G=None) -> "DelayedRotationBuffer":
+        """Queue every wave of a :class:`RotationSequence` in order.
+
+        The legacy raw-array form ``push_sequence(C, S[, G])`` is still
+        accepted but deprecated — wrap the waves in a
+        ``RotationSequence`` instead.
+        """
+        from repro.core.sequence import RotationSequence
+
+        if not isinstance(seq, RotationSequence):
+            import warnings
+
+            warnings.warn(
+                "push_sequence(C, S) with raw wave arrays is deprecated; "
+                "push a RotationSequence instead",
+                DeprecationWarning, stacklevel=2)
+            seq = RotationSequence(np.asarray(seq), np.asarray(S),
+                                   None if G is None else np.asarray(G))
+        C = np.asarray(seq.cos)
+        S_ = np.asarray(seq.sin)
+        G_ = None if seq.sign is None else np.asarray(seq.sign)
+        if G_ is None and seq.reflect:
+            G_ = np.ones(C.shape, np.float64)
         for p in range(C.shape[1]):
-            self.push(C[:, p], S[:, p],
-                      None if G is None else np.asarray(G)[:, p])
+            self.push(C[:, p], S_[:, p], None if G_ is None else G_[:, p])
         return self
 
-    def _stacked(self):
+    def _pending_sequence(self):
+        """Pending waves as one RotationSequence, identity-padded to the
+        flush shape (``(n-1, k_delay)``) when ``pad_flush`` is on."""
+        from repro.core.sequence import RotationSequence
+
         k = len(self._c)
-        pad = self.k_delay - k if self.pad_flush else 0
-        C = np.ones((self.planes, k + pad), np.float64)
-        S = np.zeros((self.planes, k + pad), np.float64)
-        C[:, :k] = np.stack(self._c, 1)
-        S[:, :k] = np.stack(self._s, 1)
+        C = np.stack(self._c, 1)
+        S = np.stack(self._s, 1)
         G = None
         if any(g is not None for g in self._g):
-            G = np.full((self.planes, k + pad), -1.0, np.float64)
+            G = np.full((self.planes, k), -1.0, np.float64)
             for p, g in enumerate(self._g):
                 if g is not None:
                     G[:, p] = g
-        return C, S, G
+        dt = self._M.dtype
+        seq = RotationSequence(C.astype(dt), S.astype(dt),
+                               None if G is None else G.astype(dt))
+        if self.pad_flush and k < self.k_delay:
+            seq = seq.pad_to(self.k_delay)
+        return seq
 
     def flush(self):
-        """Apply all pending waves in one registry-dispatched call."""
+        """Apply all pending waves through the cached frozen plan."""
         if self._c:
-            import jax.numpy as jnp
-
-            from repro.core.api import apply_rotation_sequence
-
-            C, S, G = self._stacked()
-            dt = self._M.dtype
-            self._M = apply_rotation_sequence(
-                self._M, jnp.asarray(C, dt), jnp.asarray(S, dt),
-                method=self.method,
-                G=None if G is None else jnp.asarray(G, dt),
-                autotune=self.autotune, **self.apply_kw)
+            seq = self._pending_sequence()
+            plan_key = (seq.k, seq.sign is not None)
+            plan = self._plans.get(plan_key)
+            if plan is None:
+                plan = seq.plan(like=self._M, method=self.method,
+                                autotune=self.autotune, **self.apply_kw)
+                self._plans[plan_key] = plan
+            else:
+                plan = plan.rebind(seq)
+            # host-driven accumulation is never differentiated through;
+            # apply_direct skips the custom_vjp wrapper (and keeps the
+            # backend's native autodiff semantics if anyone ever does)
+            self._M = plan.apply_direct(self._M)
             self._c.clear()
             self._s.clear()
             self._g.clear()

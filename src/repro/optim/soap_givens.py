@@ -4,9 +4,10 @@ maintained by *rotation-sequence eigensolvers*.
 For each 2D parameter ``W`` (d_in, d_out) we track Kronecker covariance
 factors ``L = E[G G^T]`` and ``R = E[G^T G]`` (dims capped at
 ``max_dim``).  Every ``update_freq`` steps the eigenbases of ``L`` and
-``R`` are refreshed by a solver that *records* its pivots as a rotation
-sequence and applies them with the paper's optimized kernels through the
-registry (``method="auto"`` cost-model dispatch):
+``R`` are refreshed by a solver that *records* its pivots as a
+first-class ``RotationSequence`` and applies them with the paper's
+optimized kernels through ``seq.plan`` (``method="auto"`` cost-model
+dispatch):
 
 * ``solver="jacobi"`` (default) — round-robin Jacobi (``core.jacobi``),
   jit-friendly (runs inside ``lax.cond``).
@@ -118,8 +119,9 @@ class SoapGivens:
                     + (1 - self.shampoo_beta) * (g.T @ g)
 
                 def do_refresh(_):
-                    # Jacobi on the covariances; basis applied via the
-                    # registry-dispatched rotation-sequence machinery
+                    # Jacobi on the covariances; the recorded pivot
+                    # RotationSequence is applied to the identity basis
+                    # via seq.plan dispatch inside jacobi_apply_basis
                     resL = jacobi_eigh(L, cycles=self.jacobi_cycles)
                     resR = jacobi_eigh(R, cycles=self.jacobi_cycles)
                     QL = jacobi_apply_basis(resL, method=self.apply_method)

@@ -78,29 +78,36 @@ def wire_bytes(x) -> int:
 
 # --------------------------------------------------------------- low-rank --
 
-def svd_lowrank(W, rank: int):
+def svd_lowrank(W, rank: int, *, apply_method: str = "auto",
+                k_delay: int = 32):
     """Truncated SVD of a 2D array via the rotation-sequence SVD solver.
 
     Returns ``(U_r, s_r, Vt_r)`` with ``U_r (m, r)``, ``s_r (r,)``,
-    ``Vt_r (r, n)`` — the best rank-``r`` approximation factors.
+    ``Vt_r (r, n)`` — the best rank-``r`` approximation factors.  The
+    singular vectors are accumulated from the solver's recorded
+    ``RotationSequence`` waves through one cached ``SequencePlan`` per
+    accumulator shape; ``apply_method``/``k_delay`` parameterize that
+    plan-once/apply-many path (see ``repro.eig``).
     """
     from repro.eig import svd_givens  # lazy: parallel must not need eig
 
     if W.ndim != 2:
         raise ValueError(f"svd_lowrank expects a 2D array, got {W.shape}")
     r = min(int(rank), min(W.shape))
-    U, s, Vt = svd_givens(W)
+    U, s, Vt = svd_givens(W, apply_method=apply_method, k_delay=k_delay)
     return U[:, :r], s[:r], Vt[:r, :]
 
 
-def compress_lowrank(W, rank: int) -> Tuple[jax.Array, jax.Array]:
+def compress_lowrank(W, rank: int, **svd_kw) -> Tuple[jax.Array, jax.Array]:
     """Rank-``r`` wire format for a 2D gradient: ``(P, Q)``.
 
     ``P = U_r * s_r`` (m, r) and ``Q = Vt_r`` (r, n);
     ``decompress_lowrank(P, Q) = P @ Q`` is the best rank-``r``
-    approximation of ``W``.
+    approximation of ``W``.  ``svd_kw`` (``apply_method``, ``k_delay``)
+    reaches the rotation-sequence application plan in
+    :func:`svd_lowrank`.
     """
-    U, s, Vt = svd_lowrank(W, rank)
+    U, s, Vt = svd_lowrank(W, rank, **svd_kw)
     return U * s[None, :], Vt
 
 
@@ -108,14 +115,14 @@ def decompress_lowrank(P, Q) -> jax.Array:
     return P @ Q
 
 
-def lowrank_error_feedback(grad, residual, rank: int):
+def lowrank_error_feedback(grad, residual, rank: int, **svd_kw):
     """EF-SGD with a low-rank code: compress ``grad + residual``.
 
     Returns ``(sent, new_residual)`` like :func:`error_feedback_update`;
     the discarded singular directions are carried to the next step.
     """
     total = grad + residual
-    P, Q = compress_lowrank(total, rank)
+    P, Q = compress_lowrank(total, rank, **svd_kw)
     sent = decompress_lowrank(P, Q)
     return sent, total - sent
 

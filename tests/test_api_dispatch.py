@@ -178,6 +178,48 @@ def test_explicit_tiles_override_auto_plan():
                                atol=5e-5, rtol=1e-4)
 
 
+def test_cross_shape_plan_interpolation():
+    """An unmeasured shape borrows the nearest measured plan of its
+    eligibility class before the cost model is re-run."""
+    clear_plan_cache()
+    donor = select_plan(16, 48, 6, platform="cpu", autotune=True,
+                        autotune_top=2)
+    assert donor.source == "measured"
+    # nearby unmeasured shape: borrowed, not model-ranked
+    borrowed = select_plan(20, 64, 8, platform="cpu")
+    assert borrowed.source == "interpolated"
+    assert borrowed.method == donor.method
+    assert (borrowed.n_b, borrowed.k_b) == (donor.n_b, donor.k_b)
+    # cached under its own key afterwards
+    stats0 = plan_cache_stats()["hits"]
+    assert select_plan(20, 64, 8, platform="cpu") == borrowed
+    assert plan_cache_stats()["hits"] == stats0 + 1
+    # a different eligibility class (signs) must NOT borrow it
+    other = select_plan(20, 64, 8, platform="cpu", signs=True)
+    assert other.source == "model"
+    # nearest-donor selection: seed a second, farther measured plan and
+    # check log-distance picks the close one
+    clear_plan_cache()
+    import dataclasses as _dc
+    near_key = (16, 48, 6, "float32", "cpu", False, False)
+    far_key = (1024, 4096, 128, "float32", "cpu", False, False)
+    registry._PLAN_CACHE[near_key] = _dc.replace(donor, source="measured")
+    registry._PLAN_CACHE[far_key] = _dc.replace(
+        donor, method="accumulated", n_b=96, k_b=96, source="measured")
+    pick = select_plan(20, 64, 8, platform="cpu")
+    assert pick.source == "interpolated"
+    assert pick.method == donor.method and pick.n_b == donor.n_b
+    # ... but a shape beyond the log-distance cap must NOT borrow: the
+    # cost model is the better guess across regime changes
+    far_pick = select_plan(16384, 16384, 2048, platform="cpu")
+    assert far_pick.source == "model"
+    # autotune=True ignores the borrowed entry and measures for real
+    measured = select_plan(20, 64, 8, platform="cpu", autotune=True,
+                           autotune_top=1)
+    assert measured.source == "measured"
+    clear_plan_cache()
+
+
 def test_autotune_measures_and_caches():
     clear_plan_cache()
     plan = select_plan(16, 48, 6, platform="cpu", autotune=True,

@@ -22,6 +22,7 @@ def _run(code: str):
 
 def test_row_and_column_sharded_rotseq():
     out = _run("""
+        import warnings
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.rotations import random_sequence
         from repro.core.ref import rot_sequence_numpy
@@ -36,14 +37,34 @@ def test_row_and_column_sharded_rotseq():
             A = rng.standard_normal((m, n)).astype(np.float32)
             seq = random_sequence(jax.random.key(n + k), n, k)
             ref = rot_sequence_numpy(A, seq.cos, seq.sin)
-            o1 = rot_sequence_row_sharded(jnp.array(A), seq.cos, seq.sin,
-                                          mesh, n_b=n_b, k_b=k_b)
+            o1 = rot_sequence_row_sharded(jnp.array(A), seq, mesh,
+                                          n_b=n_b, k_b=k_b)
             o2 = rot_sequence_column_sharded_padded(
-                jnp.array(A), seq.cos, seq.sin, mesh, col_axis="model",
+                jnp.array(A), seq, mesh, col_axis="model",
                 n_b=n_b, k_b=k_b, row_axes=("data",), method=method)
             for o in (o1, o2):
                 err = np.abs(np.asarray(o, np.float64) - ref).max()
                 assert err < 1e-4, (m, n, k, method, err)
+        # legacy raw-array signature still works, with a DeprecationWarning
+        A = rng.standard_normal((8, 32)).astype(np.float32)
+        seq = random_sequence(jax.random.key(0), 32, 5)
+        ref = rot_sequence_numpy(A, seq.cos, seq.sin)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            o = rot_sequence_row_sharded(jnp.array(A), seq.cos, seq.sin,
+                                         mesh, n_b=4, k_b=2)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        assert np.abs(np.asarray(o, np.float64) - ref).max() < 1e-4
+        # mesh accepted as a keyword; forgetting it is a clear TypeError
+        o = rot_sequence_row_sharded(jnp.array(A), seq, mesh=mesh,
+                                     n_b=4, k_b=2)
+        assert np.abs(np.asarray(o, np.float64) - ref).max() < 1e-4
+        try:
+            rot_sequence_row_sharded(jnp.array(A), seq)
+        except TypeError as e:
+            assert "mesh" in str(e), e
+        else:
+            raise AssertionError("missing mesh must raise TypeError")
         print("DIST OK")
     """)
     assert "DIST OK" in out

@@ -1,0 +1,408 @@
+"""First-class RotationSequence type: pytree/jit/vmap round-trips,
+plan-once/apply-many equivalence, composition semantics (transpose,
+concatenation, slicing, identity padding), custom_vjp gradients against
+finite differences and the linearized reference, and the hoisted
+empty-sequence identity across every named backend."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (RotationSequence, SequencePlan,
+                        apply_rotation_sequence, random_sequence)
+from repro.core.ref import rot_sequence_numpy, rot_sequence_unoptimized
+
+METHODS = ["unoptimized", "wavefront", "blocked", "accumulated",
+           "pallas_wave", "pallas_mxu"]
+
+
+def _kw(method, n_b=8, k_b=4):
+    kw = dict(n_b=n_b, k_b=k_b)
+    if method.startswith("pallas"):
+        kw["m_blk"] = 8
+    return kw
+
+
+def _problem(m, n, k, seed=0):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    seq = random_sequence(jax.random.key(seed + 1), n, k)
+    return A, seq
+
+
+# ------------------------------------------------------------- pytree ----
+
+def test_pytree_roundtrip_preserves_structure():
+    _, seq = _problem(4, 9, 3)
+    leaves, treedef = jax.tree_util.tree_flatten(seq)
+    assert len(leaves) == 2  # cos, sin (sign=None contributes no leaf)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, RotationSequence)
+    assert back.reflect == seq.reflect and back.sign is None
+    assert (back.cos == seq.cos).all() and (back.sin == seq.sin).all()
+
+    signed = RotationSequence(seq.cos, seq.sin,
+                              jnp.full(seq.shape, -1.0), False)
+    leaves, treedef = jax.tree_util.tree_flatten(signed)
+    assert len(leaves) == 3
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.sign is not None
+
+
+def test_sequence_under_jit():
+    A, seq = _problem(5, 11, 4)
+
+    @jax.jit
+    def f(sq, a):
+        return sq.apply(a, method="blocked", n_b=8, k_b=4)
+
+    out = f(seq, A)
+    ref = rot_sequence_numpy(A, seq.cos, seq.sin)
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_sequence_under_vmap():
+    A, _ = _problem(5, 9, 3)
+    seqs = [random_sequence(jax.random.key(i), 9, 3) for i in range(3)]
+    batched = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *seqs)
+    outs = jax.vmap(lambda sq: sq.apply(A, method="unoptimized"))(batched)
+    for i, sq in enumerate(seqs):
+        ref = rot_sequence_numpy(A, sq.cos, sq.sin)
+        np.testing.assert_allclose(np.asarray(outs[i], np.float64), ref,
+                                   atol=5e-5, rtol=1e-4)
+
+
+# ------------------------------------------------- plan-once/apply-many --
+
+def test_plan_apply_bit_equal_to_dispatch():
+    A, seq = _problem(6, 14, 5, seed=3)
+    plan = seq.plan(like=A, method="auto")
+    assert isinstance(plan, SequencePlan)
+    out_plan = plan.apply(A)
+    out_wrap = apply_rotation_sequence(A, seq.cos, seq.sin, method="auto")
+    np.testing.assert_array_equal(np.asarray(out_plan),
+                                  np.asarray(out_wrap))
+    # repeated applications reuse the frozen plan with no registry probe
+    np.testing.assert_array_equal(np.asarray(plan.apply(A)),
+                                  np.asarray(out_plan))
+
+
+def test_plan_rebind_same_shape():
+    A, seq1 = _problem(6, 10, 4, seed=5)
+    seq2 = random_sequence(jax.random.key(99), 10, 4)
+    plan = seq1.plan(like=A, method="blocked", n_b=8, k_b=4)
+    out = plan.rebind(seq2).apply(A)
+    ref = rot_sequence_numpy(A, seq2.cos, seq2.sin)
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               atol=5e-5, rtol=1e-4)
+    with pytest.raises(ValueError, match="matching wave shape"):
+        plan.rebind(random_sequence(jax.random.key(1), 10, 7))
+
+
+def test_plan_rejects_wrong_width():
+    A, seq = _problem(6, 10, 4)
+    plan = seq.plan(like=A, method="blocked")
+    with pytest.raises(ValueError, match="plan built for"):
+        plan.apply(jnp.ones((6, 12)))
+
+
+def test_named_plan_rejects_signs_on_unblocked():
+    _, seq = _problem(4, 8, 2)
+    signed = RotationSequence(seq.cos, seq.sin, jnp.full(seq.shape, -1.0))
+    with pytest.raises(ValueError, match="per-entry signs"):
+        signed.plan(m=4, method="wavefront")
+
+
+# ---------------------------------------------------------- composition --
+
+@pytest.mark.parametrize("method", ["unoptimized", "blocked", "accumulated"])
+def test_transpose_inverts_application(method):
+    A, seq = _problem(7, 12, 5, seed=7)
+    kw = _kw(method) if method != "unoptimized" else {}
+    out = seq.apply(A, method=method, **kw)
+    back = seq.T.apply(out, method=method, **kw)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(A),
+                               atol=2e-6, rtol=1e-5)
+
+
+def test_transpose_inverts_reflectors_and_mixed_signs():
+    A, seq = _problem(6, 10, 4, seed=11)
+    refl = RotationSequence(seq.cos, seq.sin, None, True)
+    back = refl.T.apply(refl.apply(A, method="blocked"), method="blocked")
+    np.testing.assert_allclose(np.asarray(back), np.asarray(A), atol=2e-6)
+
+    G = jnp.where(jax.random.bernoulli(jax.random.key(4), 0.5, seq.shape),
+                  1.0, -1.0)
+    mixed = RotationSequence(seq.cos, seq.sin, G)
+    back = mixed.T.apply(mixed.apply(A, method="blocked"), method="blocked")
+    np.testing.assert_allclose(np.asarray(back), np.asarray(A), atol=2e-6)
+
+
+def test_concat_and_slice_compose():
+    A, seq = _problem(5, 9, 6, seed=13)
+    s1, s2 = seq[:2], seq[2:]
+    assert s1.k == 2 and s2.k == 4
+    two_step = s2.apply(s1.apply(A, method="blocked"), method="blocked")
+    one_step = (s1 @ s2).apply(A, method="blocked")
+    np.testing.assert_array_equal(np.asarray(two_step),
+                                  np.asarray(one_step))
+    full = seq.apply(A, method="blocked")
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(one_step))
+    with pytest.raises(TypeError, match="slices"):
+        seq[0]
+
+
+def test_pad_to_is_identity_padding():
+    A, seq = _problem(5, 9, 3, seed=17)
+    padded = seq.pad_to(8)
+    assert padded.k == 8
+    np.testing.assert_allclose(
+        np.asarray(padded.apply(A, method="blocked", n_b=8, k_b=4)),
+        np.asarray(seq.apply(A, method="blocked", n_b=8, k_b=4)),
+        atol=1e-6)
+    with pytest.raises(ValueError, match="cannot pad"):
+        seq.pad_to(2)
+    # padding an all-reflector sequence must materialize rotation no-ops
+    refl = RotationSequence(seq.cos, seq.sin, None, True)
+    rp = refl.pad_to(8)
+    assert rp.sign is not None
+    np.testing.assert_allclose(
+        np.asarray(rp.apply(A, method="blocked", n_b=8, k_b=4)),
+        np.asarray(refl.apply(A, method="blocked", n_b=8, k_b=4)),
+        atol=1e-6)
+
+
+# --------------------------------------------------------- constructors --
+
+def test_from_waves_validates_and_normalizes():
+    with pytest.raises(ValueError, match="2D"):
+        RotationSequence.from_waves(jnp.ones((3,)), jnp.zeros((3,)))
+    with pytest.raises(ValueError, match="mismatch"):
+        RotationSequence.from_waves(jnp.ones((3, 2)), jnp.zeros((3, 3)))
+    with pytest.raises(ValueError, match="sign shape"):
+        RotationSequence.from_waves(jnp.ones((3, 2)), jnp.zeros((3, 2)),
+                                    jnp.ones((3, 3)))
+    # drifted entries are renormalized; exact ones pass through bit-for-bit
+    c = jnp.asarray([[1.0, 0.6 * 1.5], [0.0, 1.0]], jnp.float32)
+    s = jnp.asarray([[0.0, 0.8 * 1.5], [1.0, 0.0]], jnp.float32)
+    seq = RotationSequence.from_waves(c, s)
+    r2 = np.asarray(seq.cos) ** 2 + np.asarray(seq.sin) ** 2
+    np.testing.assert_allclose(r2, 1.0, atol=1e-6)
+    assert float(seq.cos[0, 0]) == 1.0 and float(seq.sin[1, 0]) == 1.0
+    untouched = RotationSequence.from_waves(c, s, normalize=False)
+    assert float(untouched.cos[0, 1]) == pytest.approx(0.9, abs=1e-7)
+    # a (0, 0) pair has no direction: both normalize modes repair it to
+    # the identity rotation instead of annihilating columns
+    for mode in ("auto", True):
+        z = RotationSequence.from_waves(jnp.zeros((3, 2)),
+                                        jnp.zeros((3, 2)), normalize=mode)
+        np.testing.assert_array_equal(np.asarray(z.cos), 1.0)
+        np.testing.assert_array_equal(np.asarray(z.sin), 0.0)
+
+
+def test_from_pairs_and_identity():
+    waves = [(np.array([0.6, 1.0]), np.array([0.8, 0.0])),
+             (np.array([1.0, 0.0]), np.array([0.0, 1.0]))]
+    seq = RotationSequence.from_pairs(waves)
+    assert seq.shape == (2, 2) and seq.sign is None
+    ident = RotationSequence.identity(5, 3)
+    A, _ = _problem(4, 5, 1)
+    np.testing.assert_array_equal(
+        np.asarray(ident.apply(A, method="blocked")), np.asarray(A))
+    with pytest.raises(ValueError, match="at least one wave"):
+        RotationSequence.from_pairs([])
+
+
+# ------------------------------------------------------------ gradients --
+
+def _reference_apply(A, C, S):
+    """Differentiable python-loop oracle (wave-major order)."""
+    n = A.shape[1]
+    for p in range(C.shape[1]):
+        for j in range(n - 1):
+            x, y = A[:, j], A[:, j + 1]
+            A = A.at[:, j].set(C[j, p] * x + S[j, p] * y)
+            A = A.at[:, j + 1].set(-S[j, p] * x + C[j, p] * y)
+    return A
+
+
+@pytest.mark.parametrize("method", ["unoptimized", "blocked", "accumulated",
+                                    "auto"])
+def test_grad_matches_finite_differences_f32(method):
+    A, seq = _problem(4, 7, 3, seed=23)
+    kw = {} if method in ("unoptimized", "auto") else _kw(method)
+    plan = seq.plan(like=A, method=method, **kw)
+
+    def loss(a):
+        return (plan.apply(a) ** 2).sum()
+
+    g = np.asarray(jax.grad(loss)(A), np.float64)
+    An = np.asarray(A)
+    eps = 1e-2  # central differences: f32 noise floor ~1e-3 on the grad
+    for i in range(A.shape[0]):
+        for j in range(A.shape[1]):
+            e = np.zeros_like(An)
+            e[i, j] = eps
+            fd = (float(loss(jnp.asarray(An + e)))
+                  - float(loss(jnp.asarray(An - e)))) / (2 * eps)
+            assert abs(fd - g[i, j]) <= 1e-3 * max(1.0, abs(fd)), \
+                (method, i, j, fd, g[i, j])
+
+
+def test_grad_matches_linearized_reference():
+    """custom_vjp cotangent == transpose of jax.linearize on the
+    unoptimized reference (which differentiates through the actual
+    rotation loop)."""
+    A, seq = _problem(5, 8, 3, seed=29)
+    plan = seq.plan(like=A, method="accumulated", n_b=8, k_b=4)
+
+    _, f_lin = jax.linearize(
+        lambda a: rot_sequence_unoptimized(a, seq.cos, seq.sin), A)
+    f_t = jax.linear_transpose(f_lin, A)
+    dY = jnp.asarray(
+        np.random.default_rng(31).standard_normal(A.shape), jnp.float32)
+    (dA_ref,) = f_t(dY)
+    _, vjp = jax.vjp(plan.apply, A)
+    (dA_plan,) = vjp(dY)
+    np.testing.assert_allclose(np.asarray(dA_plan), np.asarray(dA_ref),
+                               atol=2e-6, rtol=1e-5)
+    # and both agree with grad of the python-loop oracle
+    g_oracle = jax.grad(
+        lambda a: (_reference_apply(a, seq.cos, seq.sin) ** 2).sum())(A)
+    g_plan = jax.grad(lambda a: (plan.apply(a) ** 2).sum())(A)
+    np.testing.assert_allclose(np.asarray(g_plan), np.asarray(g_oracle),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_grad_matches_finite_differences_f64():
+    """f64 gradcheck at <=1e-8 needs x64 mode; isolate it in a
+    subprocess so the suite's f32 default is untouched."""
+    code = textwrap.dedent("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core import random_sequence
+
+        rng = np.random.default_rng(0)
+        A = jnp.asarray(rng.standard_normal((4, 6)), jnp.float64)
+        seq = random_sequence(jax.random.key(1), 6, 3, dtype=jnp.float64)
+        plan = seq.plan(like=A, method="blocked", n_b=8, k_b=4)
+        loss = lambda a: (plan.apply(a) ** 2).sum()
+        g = np.asarray(jax.grad(loss)(A))
+        An = np.asarray(A)
+        eps = 1e-6
+        worst = 0.0
+        for i in range(4):
+            for j in range(6):
+                e = np.zeros_like(An); e[i, j] = eps
+                fd = (float(loss(jnp.asarray(An + e)))
+                      - float(loss(jnp.asarray(An - e)))) / (2 * eps)
+                worst = max(worst, abs(fd - g[i, j]) / max(1.0, abs(fd)))
+        assert worst <= 1e-8, worst
+        print("F64 GRAD OK", worst)
+    """)
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                      text=True, timeout=600, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "F64 GRAD OK" in r.stdout
+
+
+def test_grad_with_reflect_through_unblocked_backend():
+    """Transposing an all-reflector sequence materializes mixed signs;
+    the cotangent must silently reroute through the blocked family."""
+    A, seq = _problem(4, 6, 2, seed=37)
+    refl = RotationSequence(seq.cos, seq.sin, None, True)
+    plan = refl.plan(like=A, method="unoptimized")
+    g = jax.grad(lambda a: (plan.apply(a) ** 2).sum())(A)
+    g_ref = jax.grad(
+        lambda a: (plan.apply(a) ** 2).sum())(A + 0)  # deterministic
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g_ref))
+    # value check against the blocked backend's own gradient
+    plan_b = refl.plan(like=A, method="blocked", n_b=8, k_b=4)
+    g_b = jax.grad(lambda a: (plan_b.apply(a) ** 2).sum())(A)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_b), atol=1e-5)
+
+
+def test_compat_wrapper_keeps_native_angle_gradients():
+    """The raw-array wrapper must keep the seed's autodiff semantics:
+    gradients w.r.t. C/S flow through the actual backend computation
+    (the typed plan.apply is the path with constant-sequence VJP)."""
+    A, seq = _problem(5, 8, 3, seed=43)
+    g_wrap = jax.grad(lambda c: (apply_rotation_sequence(
+        A, c, seq.sin, method="blocked", n_b=8, k_b=4) ** 2).sum())(seq.cos)
+    g_ref = jax.grad(lambda c: (rot_sequence_unoptimized(
+        A, c, seq.sin) ** 2).sum())(seq.cos)
+    assert float(jnp.abs(g_wrap).max()) > 0  # not silently zeroed
+    np.testing.assert_allclose(np.asarray(g_wrap), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+    # the typed plan treats the sequence as a constant, by contract
+    plan = seq.plan(like=A, method="blocked", n_b=8, k_b=4)
+    g_plan = jax.grad(lambda c: (plan.rebind(
+        RotationSequence(c, seq.sin)).apply(A) ** 2).sum())(seq.cos)
+    np.testing.assert_array_equal(np.asarray(g_plan), 0.0)
+
+
+# ------------------------------------------- empty sequences (bugfix) ----
+
+@pytest.mark.parametrize("method", METHODS + ["auto"])
+def test_empty_sequences_are_identity_for_every_method(method):
+    """Regression: the zero-wave early return used to exist only on the
+    method="auto" path; named methods crashed on (n-1, 0) or (0, k)
+    wave grids."""
+    A = jnp.asarray(np.random.default_rng(0).standard_normal((4, 6)),
+                    jnp.float32)
+    kw = {} if method in ("unoptimized", "wavefront", "auto") \
+        else _kw(method)
+    # k = 0: no waves
+    out = apply_rotation_sequence(A, jnp.ones((5, 0)), jnp.zeros((5, 0)),
+                                  method=method, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(A))
+    # n = 1: no rotation sites
+    A1 = A[:, :1]
+    out = apply_rotation_sequence(A1, jnp.ones((0, 3)), jnp.zeros((0, 3)),
+                                  method=method, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(A1))
+    # typed path
+    seq = RotationSequence(jnp.ones((5, 0)), jnp.zeros((5, 0)))
+    plan = seq.plan(like=A, method=method, **kw)
+    np.testing.assert_array_equal(np.asarray(plan.apply(A)),
+                                  np.asarray(A))
+
+
+def test_empty_sequences_still_validate_method():
+    """The empty early return must not swallow method typos or
+    capability violations."""
+    seq = RotationSequence(jnp.ones((5, 0)), jnp.zeros((5, 0)))
+    with pytest.raises(ValueError, match="unknown method"):
+        seq.plan(m=4, method="definitely_not_a_backend")
+    signed = RotationSequence(jnp.ones((5, 0)), jnp.zeros((5, 0)),
+                              jnp.ones((5, 0)))
+    with pytest.raises(ValueError, match="per-entry signs"):
+        signed.plan(m=4, method="wavefront")
+
+
+# ----------------------------------------------------------- deprecation --
+
+def test_raw_sign_kwarg_warns_deprecation():
+    A, seq = _problem(4, 8, 2, seed=41)
+    G = jnp.full(seq.shape, -1.0)
+    with pytest.warns(DeprecationWarning, match="RotationSequence"):
+        out = apply_rotation_sequence(A, seq.cos, seq.sin, method="blocked",
+                                      G=G, n_b=8, k_b=4)
+    # all-rotation signs: same result as the typed sign-free sequence
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(seq.apply(A, method="blocked", n_b=8, k_b=4)),
+        atol=1e-6)
