@@ -7,19 +7,28 @@
 # src/repro/eig/ included), that the eig subsystem routes all rotation
 # application through the dispatch registry (eig-gate), that internal
 # code speaks RotationSequence rather than raw (A, C, S) arrays
-# (seq-gate), then runs the full test suite.
+# (seq-gate), that the serving path applies rotations only through
+# SequencePlan/RotationSequence (serve-gate), then runs the full test
+# suite.
 
-.PHONY: check test compat-gate eig-gate seq-gate smoke bench
+.PHONY: check test compat-gate eig-gate seq-gate serve-gate smoke bench \
+	bench-artifacts bench-compare
 
-check: compat-gate eig-gate seq-gate test
+check: compat-gate eig-gate seq-gate serve-gate test
 
 # pytest.ini promotes the library's own DeprecationWarnings to errors
 # when they originate *from repro internals* (module regex; a -W flag
 # cannot express this because it escapes+anchors the module field):
 # internal callers must stay on the typed RotationSequence API, while
 # external callers of the compat wrappers only get the warning.
+#
+# Parallelism: pytest-xdist (`-n auto`) when installed — CI installs it
+# via requirements-dev.txt; environments without it degrade to serial.
+# Fail-fast is --maxfail=1 rather than -x because -x is unreliable
+# across xdist workers.
+PYTEST_PAR := $(shell python -c 'import xdist' 2>/dev/null && echo '-n auto')
 test:
-	PYTHONPATH=src python -m pytest -q
+	PYTHONPATH=src python -m pytest -q --maxfail=1 $(PYTEST_PAR)
 
 compat-gate:
 	@! grep -rnE 'jax\.shard_map|jax\.typeof|jax\.lax\.p(cast|vary)\b|pltpu\.(TPU)?CompilerParams' \
@@ -48,8 +57,34 @@ seq-gate:
 		|| { echo 'seq-gate FAILED: internal raw (A, C, S) application outside core/api.py — construct a RotationSequence and use seq.plan(...).apply (see matches above)'; exit 1; }
 	@echo 'seq-gate OK'
 
+# The serving path (RotationService + launch/serve.py) must apply
+# rotations only through SequencePlan / RotationSequence — never the
+# raw-array compat wrapper, a backend module, or a kernel directly —
+# or bucket plans stop being the single dispatch point.
+serve-gate:
+	@! grep -rnE 'apply_rotation_sequence\s*\(|repro\.kernels|core\.(blocked|accumulate|ref)\b|rot_sequence_(blocked|accumulated|unoptimized|wavefront|wave|mxu)' \
+		--include='*.py' src/repro/serve src/repro/launch/serve.py \
+		|| { echo 'serve-gate FAILED: the serving path must apply rotations through SequencePlan/RotationSequence only (see matches above)'; exit 1; }
+	@echo 'serve-gate OK'
+
 smoke:
 	PYTHONPATH=src:. python benchmarks/run.py --only smoke
 
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py
+
+# CI perf artifacts: JSON rows for the regression compare + upload.
+bench-artifacts:
+	PYTHONPATH=src:. python benchmarks/run.py --only smoke --json BENCH_smoke.json
+	PYTHONPATH=src:. python benchmarks/bench_eig.py --quick --json BENCH_eig.json
+	PYTHONPATH=src:. python benchmarks/run.py --only serve --json BENCH_serve.json
+
+# Fails when a tracked metric (counts exactly; interpret-mode rates by
+# >30%) regresses vs benchmarks/baselines/bench_baseline.json.
+# Regenerate the baseline with:
+#   python benchmarks/compare_baseline.py --update --baseline \
+#     benchmarks/baselines/bench_baseline.json BENCH_*.json
+bench-compare:
+	PYTHONPATH=src:. python benchmarks/compare_baseline.py \
+		--baseline benchmarks/baselines/bench_baseline.json \
+		BENCH_smoke.json BENCH_eig.json BENCH_serve.json

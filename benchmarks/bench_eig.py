@@ -42,7 +42,9 @@ def _time_apply(tag: str, n: int, seq: RotationSequence):
     plan = sl.plan(like=M, method="auto")  # plan once, time the applies
     dt = time_fn(lambda: plan.apply(M))
     nrot = int(np.count_nonzero(np.asarray(sl.sin)))
-    emit(f"eig/{tag}_n{n}", dt, f"{nrot / dt / 1e6:.2f}_Mrot_s")
+    emit(f"eig/{tag}_n{n}", dt, f"{nrot / dt / 1e6:.2f}_Mrot_s",
+         metrics={"mrot_s": nrot / dt / 1e6, "nrot": nrot,
+                  "waves": int(sl.k)})
 
 
 def run(sizes=SIZES) -> None:
@@ -55,5 +57,24 @@ def run(sizes=SIZES) -> None:
         _time_apply("jacobi_apply", n, res.rotation_sequence())
 
 
+def main() -> None:
+    """Standalone CLI used by CI: ``bench_eig.py --quick --json PATH``."""
+    import argparse
+
+    from benchmarks import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest size only (CI artifact/regression run)")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+
+    common.reset_results()
+    print("name,us_per_call,derived")
+    run(sizes=(SIZES[0],) if args.quick else SIZES)
+    if args.json:
+        common.write_json(args.json, meta={"quick": args.quick})
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,0 +1,73 @@
+"""Rotation-serving workload: batched application + bucketed service.
+
+Two rows:
+
+* ``serve/shared_batch`` — the core amortization
+  :meth:`~repro.core.sequence.SequencePlan.apply_batched` exists for:
+  one sequence applied to a batch of targets flattens to a single
+  ``(b*m, n)`` memory pass, paying per-sequence setup (tile packing,
+  accumulated ``Q_t`` factors) once instead of ``b`` times.  Timed
+  against ``b`` separate ``plan.apply`` calls on the accumulated
+  backend, where the amortized term dominates.
+* ``serve/bucketed`` — the :class:`~repro.serve.RotationService` path:
+  a mixed-shape stream admitted into shape buckets and executed through
+  one frozen plan per bucket.  Wall-clock request throughput is noisy
+  on shared CI runners, so the regression gate keys on this row's
+  *count* metrics (buckets, registry plan resolutions) plus the
+  throughput with generous headroom.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.registry import plan_cache_stats
+from repro.core.rotations import random_sequence
+from repro.serve import RotationService
+from repro.serve.rotations import synthetic_stream
+
+REQUESTS = 24
+SLOTS = 8
+
+
+def _shared_batch() -> None:
+    rng = np.random.default_rng(0)
+    b, m, n, k = 8, 64, 128, 32
+    A = jnp.asarray(rng.standard_normal((b, m, n)), jnp.float32)
+    seq = random_sequence(jax.random.key(0), n, k)
+    plan = seq.plan(like=A, method="accumulated")
+    dt_batched = time_fn(lambda: plan.apply_batched(A))
+    plan1 = seq.plan(like=A[0], method="accumulated")
+    dt_loop = time_fn(lambda: jax.block_until_ready(
+        [plan1.apply(A[i]) for i in range(b)]))
+    speedup = dt_loop / dt_batched if dt_batched > 0 else float("inf")
+    emit("serve/shared_batch", dt_batched,
+         f"x{speedup:.2f}_vs_{b}_applies",
+         metrics={"speedup": speedup, "batch": b})
+
+
+def _bucketed() -> None:
+    # the canonical demo stream (repro.serve.rotations.DEMO_SHAPES) —
+    # the launcher's --rotations mode drives the same workload, so the
+    # CI bucket-count invariant tracks one definition
+    requests = synthetic_stream(REQUESTS)
+    misses0 = plan_cache_stats()["misses"]
+    svc = RotationService(slots=SLOTS, store=False)
+    svc.apply_many(requests)  # cold pass resolves one plan per bucket
+    resolved = plan_cache_stats()["misses"] - misses0
+    dt = time_fn(lambda: jax.block_until_ready(svc.apply_many(requests)))
+    emit("serve/bucketed", dt,
+         f"{REQUESTS / dt:.0f}_req_s_{len(svc._plans)}_buckets",
+         metrics={"req_s": REQUESTS / dt,
+                  "buckets": len(svc._plans),
+                  "plans_resolved": resolved})
+
+
+def run() -> None:
+    _shared_batch()
+    _bucketed()
+
+
+if __name__ == "__main__":
+    run()

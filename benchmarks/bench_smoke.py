@@ -25,9 +25,11 @@ def run():
     plan = select_plan(M, N, K, dtype=A.dtype)
     hits0 = plan_cache_stats()["hits"]
     dt = time_fn(lambda: apply_method(A, seq, "auto"))
-    assert plan_cache_stats()["hits"] > hits0, "auto plan cache missed"
+    hit_delta = plan_cache_stats()["hits"] - hits0
+    assert hit_delta > 0, "auto plan cache missed"
     emit(f"smoke/auto->{plan.method}", dt,
-         f"nb{plan.n_b}_kb{plan.k_b}_cached")
+         f"nb{plan.n_b}_kb{plan.k_b}_cached",
+         metrics={"cache_hit": 1})
 
     # plan-once/apply-many: amortized SequencePlan.apply vs per-call
     # registry dispatch — the API-level win the typed interface exists
@@ -37,8 +39,11 @@ def run():
     dt_dispatch = time_fn(lambda: apply_method(A, seq, "auto"))
     assert (frozen.apply(A) == apply_method(A, seq, "auto")).all(), \
         "SequencePlan.apply diverged from dispatched apply"
+    overhead_us = max(dt_dispatch - dt_plan, 0.0) * 1e6
     emit("smoke/plan_once_apply_many", dt_plan,
-         f"dispatch_overhead_{max(dt_dispatch - dt_plan, 0.0)*1e6:.1f}us")
+         f"dispatch_overhead_{overhead_us:.1f}us",
+         metrics={"dispatch_overhead_us": overhead_us,
+                  "plan_apply_us": dt_plan * 1e6})
 
     # eigensolver liveness: QR path end-to-end through the delayed buffer
     import time

@@ -1,6 +1,7 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission + JSON artifacts."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -12,7 +13,42 @@ from repro.core.registry import registered_methods, select_plan
 from repro.core.rotations import random_sequence
 
 __all__ = ["time_fn", "emit", "problem", "flops_of", "apply_method",
-           "registered_methods", "select_plan"]
+           "registered_methods", "select_plan",
+           "reset_results", "collected_results", "write_json"]
+
+
+# Structured sink mirroring the CSV rows: every emit() appends
+# {"name", "us_per_call", "derived", "metrics"} here so CI can write a
+# machine-readable BENCH_*.json artifact next to the human CSV stream.
+# ``metrics`` holds numeric values the regression compare step consumes
+# (counts, rates) without re-parsing the derived string.
+_RESULTS: list = []
+
+
+def reset_results() -> None:
+    _RESULTS.clear()
+
+
+def collected_results() -> list:
+    return list(_RESULTS)
+
+
+def write_json(path: str, meta: dict | None = None) -> str:
+    """Write all rows emitted since ``reset_results`` as one artifact."""
+    import platform as _platform
+
+    import jax as _jax
+
+    payload = {
+        "format": 1,
+        "meta": dict(meta or {}, jax=_jax.__version__,
+                     backend=_jax.default_backend(),
+                     python=_platform.python_version()),
+        "rows": collected_results(),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def problem(m: int, n: int, k: int, seed: int = 0, dtype=jnp.float32):
@@ -38,9 +74,16 @@ def time_fn(fn, *args, reps: int = 3, warmup: int = 1) -> float:
     return sorted(ts)[len(ts) // 2]
 
 
-def emit(name: str, seconds: float, derived: str):
-    """CSV row: name,us_per_call,derived."""
+def emit(name: str, seconds: float, derived: str, metrics: dict | None = None):
+    """CSV row: name,us_per_call,derived (+ structured metrics sink).
+
+    ``metrics`` carries the numeric values encoded in ``derived`` (e.g.
+    ``{"mrot_s": 12.3}``) into the JSON artifact for the CI regression
+    compare; count-based metrics should be exact integers.
+    """
     print(f"{name},{seconds*1e6:.1f},{derived}")
+    _RESULTS.append({"name": name, "us_per_call": seconds * 1e6,
+                     "derived": derived, "metrics": dict(metrics or {})})
 
 
 def apply_method(A, seq, method: str = "auto", **kw):

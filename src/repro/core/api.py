@@ -123,11 +123,14 @@ registry.register(BackendSpec(
     doc="rs_gemm analogue: accumulate tile factors, sweep as GEMMs.",
 ))
 
+# Pallas kernels pad m to m_blk internally, so a shared-sequence batch
+# still flattens to (b*m, n); per-request wave batches fall back to a
+# per-element loop (supports_vmap=False) rather than vmapping pallas_call.
 registry.register(BackendSpec(
     name="pallas_wave",
     fn=_run_pallas_wave,
     capability=Capability(platforms=("tpu",), tile_min=(2, 1),
-                          needs_pallas=True),
+                          needs_pallas=True, supports_vmap=False),
     cost=registry.cost_pallas_wave,
     candidates=registry.pallas_wave_tiles,
     doc="Pallas TPU VPU wavefront kernel (packed layout, VMEM carry).",
@@ -137,7 +140,7 @@ registry.register(BackendSpec(
     name="pallas_mxu",
     fn=_run_pallas_mxu,
     capability=Capability(platforms=("tpu",), tile_min=(2, 1),
-                          needs_pallas=True),
+                          needs_pallas=True, supports_vmap=False),
     cost=registry.cost_pallas_mxu,
     candidates=registry.pallas_mxu_tiles,
     doc="Pallas TPU MXU accumulated kernel.",

@@ -63,7 +63,16 @@ _INTERPRET_PENALTY = 1e3
 
 @dataclasses.dataclass(frozen=True)
 class Problem:
-    """Shape/dtype/platform key of one application ``A (m,n) <- k waves``."""
+    """Shape/dtype/platform key of one application ``A (m,n) <- k waves``.
+
+    ``batch`` counts independent ``(m, n)`` targets served by one call
+    (the serving path's shape buckets, or a batched accumulator).
+    Rotations act row-wise, so a shared-sequence batch flattens to a
+    ``(batch*m, n)`` problem: streaming traffic and sweep flops scale
+    with the batch while per-sequence setup work (accumulating tile
+    factors ``Q_t``) is paid once — which is why ``method="auto"`` can
+    pick a different backend at ``batch=64`` than at ``batch=1``.
+    """
     m: int
     n: int
     k: int
@@ -71,11 +80,17 @@ class Problem:
     platform: str = "cpu"
     signs: bool = False    # needs per-entry G support
     sharded: bool = False  # must be traceable inside shard_map
+    batch: int = 1         # independent (m, n) targets per application
 
     @property
     def itemsize(self) -> int:
         return {"float64": 8, "float32": 4, "bfloat16": 2,
                 "float16": 2}.get(self.dtype, 4)
+
+    @property
+    def m_total(self) -> int:
+        """Total rows streamed per application (``batch * m``)."""
+        return self.m * max(1, self.batch)
 
     @property
     def hardware(self) -> Hardware:
@@ -117,6 +132,12 @@ class Capability:
     tile_max: Tuple[int, int] = (4096, 4096)
     needs_pallas: bool = False
     interpret_ok: bool = True
+    # batched execution (SequencePlan.apply_batched): rotations act
+    # row-wise, so a shared-sequence batch (b, m, n) flattens exactly to
+    # (b*m, n); "vmap" instead maps the backend over the leading axis
+    # (for kernels whose tiling assumptions are per-instance).
+    batch_via: str = "flatten"        # "flatten" | "vmap"
+    supports_vmap: bool = True        # jax.vmap-able over (A, C, S, G)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,16 +213,16 @@ def _roofline_seconds(flop_term: float, byte_term: float) -> float:
 def cost_unoptimized(p: Problem, plan: Plan) -> float:
     """Alg 1.2: 4 memops per rotation, no reuse (paper SS6 baseline)."""
     hw = p.hardware
-    flops = 6.0 * p.m * p.n * p.k
-    memops = 4.0 * p.m * p.n * p.k * p.itemsize
+    flops = 6.0 * p.m_total * p.n * p.k
+    memops = 4.0 * p.m_total * p.n * p.k * p.itemsize
     return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
 
 
 def cost_wavefront(p: Problem, plan: Plan) -> float:
     """Alg 1.3: wavefront fuses column touches to ~2 memops/rotation."""
     hw = p.hardware
-    flops = 6.0 * p.m * p.n * p.k
-    memops = 2.0 * p.m * p.n * p.k * p.itemsize
+    flops = 6.0 * p.m_total * p.n * p.k
+    memops = 2.0 * p.m_total * p.n * p.k * p.itemsize
     return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
 
 
@@ -209,17 +230,24 @@ def cost_blocked(p: Problem, plan: Plan) -> float:
     """Blocked wavefront: A streams once per band of k_b waves (SS5)."""
     hw = p.hardware
     k_b = plan.k_b or 16
-    flops = 6.0 * p.m * p.n * p.k
-    memops = 2.0 * p.m * p.n * p.itemsize * _bands(p.k, k_b)
+    flops = 6.0 * p.m_total * p.n * p.k
+    memops = 2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b)
     return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
 
 
 def _accumulated_flops(p: Problem, n_b: int, k_b: int) -> Tuple[float, float]:
-    """(MXU flops, VPU accumulation flops) for the rs_gemm formulation."""
+    """(MXU flops, VPU accumulation flops) for the rs_gemm formulation.
+
+    The GEMM sweep streams every row of every batched target
+    (``m_total``); accumulating the tile factors ``Q_t`` happens once
+    per *sequence*, so a shared-sequence batch amortizes it — this is
+    the term that flips ``method="auto"`` from the blocked family at
+    ``batch=1`` to the accumulated family at large batch.
+    """
     w = n_b + k_b
     bands = _bands(p.k, k_b)
     tiles = max(1, math.ceil((p.n + k_b - 1) / n_b))
-    sweep = bands * tiles * 2.0 * p.m * w * w           # (m,w) @ (w,w)
+    sweep = bands * tiles * 2.0 * p.m_total * w * w      # (m,w) @ (w,w)
     accum = bands * tiles * 6.0 * w * n_b * k_b          # Q_t = I rotated
     return sweep, accum
 
@@ -231,7 +259,7 @@ def cost_accumulated(p: Problem, plan: Plan) -> float:
     k_b = plan.k_b or 128
     sweep, accum = _accumulated_flops(p, n_b, k_b)
     flop_term = sweep / hw.mxu_flops + accum / hw.vpu_flops
-    memops = 2.0 * p.m * p.n * p.itemsize * _bands(p.k, k_b)
+    memops = 2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b)
     return _roofline_seconds(flop_term, memops / hw.hbm_bw)
 
 
@@ -287,8 +315,8 @@ def accumulated_tiles(p: Problem) -> List[Plan]:
 
 def _m_blk_for(p: Problem) -> int:
     if p.platform == "tpu":
-        return 256 if p.m >= 256 else 128
-    return min(256, max(8, 1 << (max(1, p.m) - 1).bit_length()))
+        return 256 if p.m_total >= 256 else 128
+    return min(256, max(8, 1 << (max(1, p.m_total) - 1).bit_length()))
 
 
 def pallas_wave_tiles(p: Problem) -> List[Plan]:
@@ -356,6 +384,42 @@ def _jax_version_str() -> str:
     return ".".join(map(str, compat.JAX_VERSION))
 
 
+def _read_versioned_json(path: str, fmt: int) -> Optional[dict]:
+    """Parse a versioned JSON store; ``None`` when the file is missing,
+    corrupt, or stale (other format or JAX version) — the shared
+    invalidation rule of every persisted-plan store (registry cache and
+    the serving plan store alike)."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(payload, dict) or payload.get("format") != fmt \
+            or payload.get("jax") != _jax_version_str():
+        return None
+    return payload
+
+
+def _atomic_write_json(path: str, payload: dict,
+                       prefix: str) -> Optional[str]:
+    """tmp+rename atomic JSON write; ``None`` (never raises) on I/O
+    errors so a read-only cache dir degrades gracefully."""
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=prefix, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, path)  # atomic on POSIX
+        except BaseException:
+            os.unlink(tmp)
+            raise
+    except OSError:
+        return None
+    return path
+
+
 def save_plan_cache(path: Optional[str] = None) -> Optional[str]:
     """Atomically write all measured/persisted plans to disk.
 
@@ -373,19 +437,13 @@ def save_plan_cache(path: Optional[str] = None) -> Optional[str]:
     if path is None:
         return None
     merged: Dict[tuple, dict] = {}
-    try:
-        with open(path) as f:
-            on_disk = json.load(f)
-        if isinstance(on_disk, dict) \
-                and on_disk.get("format") == _PLAN_CACHE_FORMAT \
-                and on_disk.get("jax") == _jax_version_str():
-            for entry in on_disk.get("plans", []):
-                try:
-                    merged[tuple(entry["key"])] = entry
-                except (KeyError, TypeError):
-                    continue
-    except (OSError, ValueError):
-        pass  # missing/corrupt file: start fresh
+    on_disk = _read_versioned_json(path, _PLAN_CACHE_FORMAT)
+    if on_disk is not None:  # missing/corrupt/stale file: start fresh
+        for entry in on_disk.get("plans", []):
+            try:
+                merged[tuple(entry["key"])] = entry
+            except (KeyError, TypeError):
+                continue
     for key, plan in _PLAN_CACHE.items():
         if plan.source in _PERSISTED_SOURCES:
             merged[key] = {"key": list(key), "method": plan.method,
@@ -396,20 +454,7 @@ def save_plan_cache(path: Optional[str] = None) -> Optional[str]:
         return None
     payload = {"format": _PLAN_CACHE_FORMAT, "jax": _jax_version_str(),
                "plans": list(merged.values())}
-    try:
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   prefix=".plans.", suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1)
-            os.replace(tmp, path)  # atomic on POSIX
-        except BaseException:
-            os.unlink(tmp)
-            raise
-    except OSError:
-        return None
-    return path
+    return _atomic_write_json(path, payload, prefix=".plans.")
 
 
 def load_plan_cache(path: Optional[str] = None) -> int:
@@ -422,14 +467,8 @@ def load_plan_cache(path: Optional[str] = None) -> int:
     path = path or plan_cache_path()
     if path is None:
         return 0
-    try:
-        with open(path) as f:
-            payload = json.load(f)
-    except (OSError, ValueError):
-        return 0
-    if not isinstance(payload, dict) \
-            or payload.get("format") != _PLAN_CACHE_FORMAT \
-            or payload.get("jax") != _jax_version_str():
+    payload = _read_versioned_json(path, _PLAN_CACHE_FORMAT)
+    if payload is None:
         return 0
     loaded = 0
     for entry in payload.get("plans", []):
@@ -451,11 +490,31 @@ def load_plan_cache(path: Optional[str] = None) -> int:
     return loaded
 
 
-# Maximum summed |log(m/m')| + |log(n/n')| + |log(k/k')| at which a
-# measured plan still transfers: ~4x per dimension on average.  Beyond
-# this the regime can differ qualitatively (cache-resident vs streaming,
-# VPU- vs MXU-bound) and the cost model is the better guess.
+# Maximum summed |log(m/m')| + |log(n/n')| + |log(k/k')| (+ batch term)
+# at which a measured plan still transfers: ~4x per dimension on
+# average.  Beyond this the regime can differ qualitatively
+# (cache-resident vs streaming, VPU- vs MXU-bound) and the cost model is
+# the better guess.
 _INTERP_MAX_LOGDIST = 3 * math.log(4.0)
+
+
+def _plan_key(problem: Problem) -> tuple:
+    """Cache key for a problem.
+
+    ``batch=1`` keys keep the legacy 7-tuple layout so plan caches
+    persisted before the batch field existed stay valid; batched
+    problems append the batch count.
+    """
+    base = (problem.m, problem.n, problem.k, problem.dtype,
+            problem.platform, problem.signs, problem.sharded)
+    return base if problem.batch == 1 else base + (problem.batch,)
+
+
+def _split_key(key: tuple):
+    """``key -> ((m, n, k, batch), (dtype, platform, signs, sharded))``."""
+    m, n, k = key[:3]
+    batch = key[7] if len(key) > 7 else 1
+    return (m, n, k, batch), tuple(key[3:7])
 
 
 def _interpolated_plan(problem: Problem, key: tuple) -> Optional[Plan]:
@@ -474,19 +533,21 @@ def _interpolated_plan(problem: Problem, key: tuple) -> Optional[Plan]:
     eligible = {spec.name for spec in eligible_backends(problem)}
     best: Optional[Plan] = None
     best_dist = _INTERP_MAX_LOGDIST
+    (m1, n1, k1, b1), cls1 = _split_key(key)
     for cached_key, plan in _PLAN_CACHE.items():
         if plan.source not in _PERSISTED_SOURCES:
             continue
-        m2, n2, k2 = cached_key[:3]
-        if cached_key[3:] != key[3:]:  # (dtype, platform, signs, sharded)
+        (m2, n2, k2, b2), cls2 = _split_key(cached_key)
+        if cls2 != cls1:  # (dtype, platform, signs, sharded)
             continue
         if plan.method not in eligible:
             continue
-        if min(m2, n2, k2) < 1:
+        if min(m2, n2, k2, b2) < 1:
             continue
-        dist = (abs(math.log(problem.m / m2))
-                + abs(math.log(problem.n / n2))
-                + abs(math.log(problem.k / k2)))
+        dist = (abs(math.log(m1 / m2))
+                + abs(math.log(n1 / n2))
+                + abs(math.log(k1 / k2))
+                + abs(math.log(b1 / b2)))
         if dist < best_dist:
             best, best_dist = plan, dist
     if best is None:
@@ -523,7 +584,9 @@ def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
 
     rng = np.random.default_rng(0)
     dt = jnp.dtype(problem.dtype)
-    A = jnp.asarray(rng.standard_normal((problem.m, problem.n)), dt)
+    # batched problems execute flattened (rotations are row-wise), so
+    # time the shape the serving path will actually run
+    A = jnp.asarray(rng.standard_normal((problem.m_total, problem.n)), dt)
     th = rng.standard_normal((problem.n - 1, problem.k))
     C = jnp.asarray(np.cos(th), dt)
     S = jnp.asarray(np.sin(th), dt)
@@ -545,28 +608,36 @@ def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
 
 def select_plan(m: int, n: int, k: int, *, dtype="float32",
                 platform: Optional[str] = None, signs: bool = False,
-                sharded: bool = False, autotune: bool = False,
-                autotune_top: int = 3) -> Plan:
+                sharded: bool = False, batch: int = 1,
+                autotune: bool = False, autotune_top: int = 3) -> Plan:
     """Pick ``(method, n_b, k_b, m_blk)`` for a problem, with caching.
 
     Cost-model ranking by default; with ``autotune=True`` the top
     ``autotune_top`` modeled plans are measured end-to-end and the
     fastest wins.  Winning plans are cached per
-    ``(m, n, k, dtype, platform, signs, sharded)`` — an autotuned
-    (measured) entry overwrites a model-ranked one for the same key and
-    is then reused by plain ``method="auto"`` calls too.
+    ``(m, n, k, dtype, platform, signs, sharded[, batch])`` — an
+    autotuned (measured) entry overwrites a model-ranked one for the
+    same key and is then reused by plain ``method="auto"`` calls too.
+
+    ``batch`` is the number of independent ``(m, n)`` targets served per
+    application (see :class:`Problem`): the amortization terms differ,
+    so batch 64 can legitimately pick a different backend than batch 1.
 
     Unmeasured shapes first try **cross-shape interpolation**: the
     nearest measured/persisted plan of the same eligibility class
     (identical dtype/platform/signs/sharded, eligible backend) by
-    ``(m, n, k)`` log-distance is borrowed (``source="interpolated"``)
-    before the cost model is re-run, so autotune work transfers to
-    neighbouring problem sizes.
+    ``(m, n, k, batch)`` log-distance is borrowed
+    (``source="interpolated"``) before the cost model is re-run, so
+    autotune work transfers to neighbouring problem sizes.  A later
+    ``autotune=True`` call upgrades a borrowed entry in place — the
+    borrowed plan's tiles join the measured candidate set, and the
+    winning measurement is persisted (exactly once) like any other.
     """
     import jax.numpy as jnp
 
     platform = platform or compat.default_platform()
     dtype = str(jnp.dtype(dtype))
+    batch = max(1, int(batch))
     # Measurements time THIS host's default backend; for any other
     # platform (or a shard_map sub-problem, which can't be reproduced
     # standalone) fall back to model ranking rather than cache bogus
@@ -574,7 +645,9 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     # measured one can never exist for this key.
     can_measure = platform == compat.default_platform() and not sharded
     autotune = autotune and can_measure
-    key = (m, n, k, dtype, platform, signs, sharded)
+    problem = Problem(m=m, n=n, k=k, dtype=dtype, platform=platform,
+                      signs=signs, sharded=sharded, batch=batch)
+    key = _plan_key(problem)
     cached = _PLAN_CACHE.get(key)
     if cached is not None and (not autotune
                                or cached.source in _PERSISTED_SOURCES):
@@ -590,8 +663,6 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
         _PLAN_CACHE[key] = best
         return best
 
-    problem = Problem(m=m, n=n, k=k, dtype=dtype, platform=platform,
-                      signs=signs, sharded=sharded)
     if not autotune:
         borrowed = _interpolated_plan(problem, key)
         if borrowed is not None:
@@ -604,8 +675,17 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
         )
     best = plans[0]
     if autotune:
+        candidates = plans[:max(1, autotune_top)]
+        # an interpolated entry being upgraded is a real hint: measure
+        # its tiles too, even when the model does not rank them top-N
+        if cached is not None and cached.source == "interpolated" \
+                and not any(
+                    (pl.method, pl.n_b, pl.k_b, pl.m_blk)
+                    == (cached.method, cached.n_b, cached.k_b, cached.m_blk)
+                    for pl in candidates):
+            candidates = candidates + [cached]
         timed = []
-        for plan in plans[:max(1, autotune_top)]:
+        for plan in candidates:
             try:
                 secs = _measure_plan(problem, plan)
             except Exception:  # backend crashed at these tiles: skip it

@@ -55,7 +55,7 @@ import jax.numpy as jnp
 
 from repro.core import registry
 
-__all__ = ["RotationSequence", "SequencePlan"]
+__all__ = ["RotationSequence", "SequencePlan", "PLAN_DICT_FORMAT"]
 
 
 # sign value of the unified update ``y' = g * (s x - c y)``
@@ -311,24 +311,78 @@ class RotationSequence:
         return jnp.full(self.cos.shape, _REFL if self.reflect else _ROT,
                         self.cos.dtype)
 
+    def with_signs(self) -> "RotationSequence":
+        """Per-entry-sign normal form: ``sign`` materialized, ``reflect``
+        folded in.  Bucketed serving uses this so every sequence in a
+        sign-carrying batch presents the same pytree structure."""
+        if self.sign is not None:
+            return self
+        return RotationSequence(self.cos, self.sin, self._sign_array(),
+                                False)
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-serializable dict (wave arrays as nested lists).
+
+        Intended for small recorded sequences (warm-start state,
+        request replay); large waves belong in array checkpoints.
+        """
+        import numpy as np
+
+        return {
+            "cos": np.asarray(self.cos).tolist(),
+            "sin": np.asarray(self.sin).tolist(),
+            "sign": None if self.sign is None
+            else np.asarray(self.sign).tolist(),
+            "reflect": bool(self.reflect),
+            "dtype": str(self.dtype),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RotationSequence":
+        """Inverse of :meth:`to_dict` (waves pass through bit-for-bit)."""
+        import numpy as np
+
+        dtype = jnp.dtype(d.get("dtype", "float32"))
+        cos = jnp.asarray(np.asarray(d["cos"], dtype))
+        sin = jnp.asarray(np.asarray(d["sin"], dtype))
+        sign = d.get("sign")
+        if sign is not None:
+            sign = jnp.asarray(np.asarray(sign, dtype))
+        return cls.from_waves(cos, sin, sign,
+                              reflect=bool(d.get("reflect", False)),
+                              normalize=False)
+
     # -- execution ---------------------------------------------------------
     def plan(self, like=None, *, m: Optional[int] = None,
              method: str = "auto", autotune: bool = False,
              platform: Optional[str] = None, sharded: bool = False,
+             batch: Optional[int] = None,
              n_b: Optional[int] = None, k_b: Optional[int] = None,
              **kw) -> "SequencePlan":
         """Resolve the registry once into a frozen :class:`SequencePlan`.
 
         ``like`` (an array or ShapeDtypeStruct) supplies the target row
-        count and dtype; ``m`` overrides the row count.  ``method="auto"``
-        runs capability filtering + the SS6 cost model (or measured
-        ``autotune``) through the per-shape plan cache; a named method
-        keeps the seed defaults (``n_b=64, k_b=16`` for tiled backends).
+        count and dtype; ``m`` overrides the row count.  A 3D ``like``
+        (``(b, m, n)``, a batched target for :meth:`SequencePlan.
+        apply_batched`) supplies the batch count too; ``batch``
+        overrides it.  ``method="auto"`` runs capability filtering + the
+        SS6 cost model (or measured ``autotune``) through the per-shape
+        plan cache — batch-aware, so a batch-64 bucket can plan onto a
+        different backend than a single request; a named method keeps
+        the seed defaults (``n_b=64, k_b=16`` for tiled backends).
         Explicit ``n_b``/``k_b`` always override the planned tiles.
         """
         _ensure_backends()
+        like_shape = getattr(like, "shape", None)
+        if like_shape is not None and len(like_shape) == 3:
+            if batch is None:
+                batch = like_shape[0]
+            if m is None:
+                m = like_shape[1]
         if m is None:
-            m = like.shape[0] if like is not None else max(self.n, 1)
+            m = like_shape[0] if like_shape is not None else max(self.n, 1)
+        batch = 1 if batch is None else max(1, int(batch))
         dtype = getattr(like, "dtype", None) or self.dtype
         n, k = self.n, self.k
         if method != "auto":
@@ -346,7 +400,7 @@ class RotationSequence:
             plan = registry.select_plan(
                 m, n, k, dtype=dtype, platform=platform,
                 signs=self.sign is not None, sharded=sharded,
-                autotune=autotune)
+                batch=batch, autotune=autotune)
             planned = plan.kwargs()
             if n_b is not None:
                 planned["n_b"] = n_b
@@ -436,6 +490,84 @@ class SequencePlan:
         return _run_backend(self.method, self.kwargs, seq.reflect,
                             A, seq.cos, seq.sin, seq.sign)
 
+    def apply_batched(self, A, sequences=None, *, direct: bool = False):
+        """Apply to a batch of targets ``A`` of shape ``(b, m, n)``.
+
+        With ``sequences=None`` the plan's own sequence is applied to
+        every batch element.  Rotations act row-wise, so most backends
+        execute the *flattened* ``(b*m, n)`` problem — bit-identical to
+        ``b`` separate :meth:`apply` calls; backends whose capability
+        says ``batch_via="vmap"`` are mapped over the leading axis
+        instead.
+
+        With ``sequences`` (an iterable of ``b`` :class:`RotationSequence`
+        objects of the plan's wave shape) each batch element gets its
+        own waves — the serving path's shape-bucketed execution.  The
+        backend is ``jax.vmap``-ed over ``(A, cos, sin[, sign])`` where
+        its capability allows (bit-identical to per-request application
+        for the pure-jnp backends) and looped per element otherwise.
+
+        Autodiff mirrors the single-target pair :meth:`apply` /
+        :meth:`apply_direct` uniformly across every strategy:
+        ``direct=False`` (default) differentiates w.r.t. ``A`` through
+        the transposed-sequence ``custom_vjp`` (wave cotangents are
+        symbolic zeros); ``direct=True`` calls the backend with its
+        native JAX autodiff semantics.
+        """
+        A = jnp.asarray(A)
+        if A.ndim != 3:
+            raise ValueError(
+                f"apply_batched expects A of shape (b, m, n); "
+                f"got {A.shape} — use apply() for a single target")
+        if self.method == _IDENTITY:
+            return A
+        seq = self.sequence
+        b, m, n = A.shape
+        if n != seq.n:
+            raise ValueError(
+                f"plan built for n={seq.n} targets; got A.shape={A.shape}")
+        run = _run_backend if direct else _apply_planned
+        cap = registry.get_backend(self.method).capability
+        if sequences is None:
+            if cap.batch_via == "flatten":
+                out = run(self.method, self.kwargs, seq.reflect,
+                          A.reshape(b * m, n), seq.cos, seq.sin, seq.sign)
+                return out.reshape(b, m, n)
+            return jax.vmap(
+                lambda Ai: run(self.method, self.kwargs, seq.reflect,
+                               Ai, seq.cos, seq.sin, seq.sign))(A)
+
+        seqs = list(sequences)
+        if len(seqs) != b:
+            raise ValueError(
+                f"{len(seqs)} sequences for a batch of {b} targets")
+        for s in seqs:
+            if not isinstance(s, RotationSequence):
+                raise TypeError(f"expected RotationSequence, got {type(s)}")
+            if tuple(s.shape) != tuple(seq.shape):
+                raise ValueError(
+                    f"sequence shape {s.shape} != plan shape {seq.shape}; "
+                    f"pad_to a bucket-stable wave count first")
+            if (s.sign is None) != (seq.sign is None) \
+                    or s.reflect != seq.reflect:
+                raise ValueError(
+                    "mixed sign/reflect structure in one batch; normalize "
+                    "with RotationSequence.with_signs() first")
+        C = jnp.stack([s.cos for s in seqs])
+        S = jnp.stack([s.sin for s in seqs])
+        G = None if seq.sign is None \
+            else jnp.stack([s.sign for s in seqs])
+        if cap.supports_vmap:
+            in_axes = (0, 0, 0, None if G is None else 0)
+            return jax.vmap(
+                lambda Ai, Ci, Si, Gi: run(
+                    self.method, self.kwargs, seq.reflect, Ai, Ci, Si, Gi),
+                in_axes=in_axes)(A, C, S, G)
+        return jnp.stack([
+            run(self.method, self.kwargs, seq.reflect,
+                A[i], C[i], S[i], None if G is None else G[i])
+            for i in range(b)])
+
     def _check_target(self, A):
         if self.method == _IDENTITY:
             return
@@ -460,6 +592,89 @@ class SequencePlan:
                     f"plan method {self.method!r} cannot carry per-entry "
                     f"signs; re-plan the sign-carrying sequence")
         return dataclasses.replace(self, sequence=sequence)
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        """Serialize the *dispatch decision* (not the waves) to JSON.
+
+        The dict captures everything a warm process needs to skip
+        planning: backend method, resolved kwargs, the registry
+        :class:`~repro.core.registry.Plan` record, and the wave
+        shape/dtype/sign signature the decision was made for.  It is
+        keyed to the running JAX version (mirroring the persisted plan
+        cache — measured decisions do not transfer across compilers);
+        :meth:`from_dict` rejects stale or mismatched entries.
+        """
+        seq = self.sequence
+        d = {
+            "format": PLAN_DICT_FORMAT,
+            "jax": registry._jax_version_str(),
+            "method": self.method,
+            "kwargs": dict(self.kwargs),
+            "shape": list(seq.shape),
+            "dtype": str(seq.dtype),
+            "signed": seq.sign is not None,
+            "reflect": bool(seq.reflect),
+        }
+        if self.plan is not None:
+            d["plan"] = {"method": self.plan.method, "n_b": self.plan.n_b,
+                         "k_b": self.plan.k_b, "m_blk": self.plan.m_blk,
+                         "est_seconds": self.plan.est_seconds,
+                         "source": self.plan.source}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict, sequence: RotationSequence) -> "SequencePlan":
+        """Rebuild a frozen plan from :meth:`to_dict`, bound to ``sequence``.
+
+        Raises ``ValueError`` when the entry is unusable: unknown
+        format, different JAX version, wave-shape/dtype/sign mismatch
+        with ``sequence``, or a backend that is no longer registered.
+        Callers holding persisted plans should treat the error as a
+        cache miss and re-plan.
+        """
+        _ensure_backends()
+        if d.get("format") != PLAN_DICT_FORMAT:
+            raise ValueError(
+                f"unsupported SequencePlan dict format {d.get('format')!r}")
+        jax_now = registry._jax_version_str()
+        if d.get("jax") != jax_now:
+            raise ValueError(
+                f"plan serialized under JAX {d.get('jax')!r}; running "
+                f"{jax_now} — re-plan (measured decisions do not transfer)")
+        if tuple(d.get("shape", ())) != tuple(sequence.shape):
+            raise ValueError(
+                f"plan serialized for wave shape {d.get('shape')}; "
+                f"sequence has {sequence.shape}")
+        if d.get("signed", False) != (sequence.sign is not None) \
+                or d.get("reflect", False) != bool(sequence.reflect):
+            raise ValueError(
+                "plan serialized for a different sign/reflect structure")
+        if d.get("dtype") != str(sequence.dtype):
+            raise ValueError(
+                f"plan serialized for dtype {d.get('dtype')!r}; "
+                f"sequence is {sequence.dtype}")
+        method = d["method"]
+        if method != _IDENTITY:
+            spec = registry.get_backend(method)  # raises on unknown
+            if sequence.sign is not None \
+                    and not spec.capability.supports_signs:
+                raise ValueError(
+                    f"serialized method {method!r} cannot carry signs")
+        kwargs = tuple(sorted(d.get("kwargs", {}).items()))
+        plan = None
+        pd = d.get("plan")
+        if pd is not None:
+            plan = registry.Plan(
+                method=str(pd.get("method", method)), n_b=pd.get("n_b"),
+                k_b=pd.get("k_b"), m_blk=pd.get("m_blk"),
+                est_seconds=float(pd.get("est_seconds", 0.0)),
+                source="persisted")
+        return cls(sequence, method, kwargs, plan)
+
+
+# JSON format version of SequencePlan.to_dict (bump on layout change)
+PLAN_DICT_FORMAT = 1
 
 
 # --------------------------------------------------------------------------

@@ -33,7 +33,11 @@ class DelayedRotationBuffer:
     """Accumulate ``M <- M @ G_wave`` lazily, flushing every ``k_delay``.
 
     Args:
-      M: initial accumulator ``(m, n)`` (e.g. an identity basis).
+      M: initial accumulator ``(m, n)`` (e.g. an identity basis), or a
+        *batched* accumulator ``(b, m, n)`` — ``b`` independent bases
+        sharing every pushed wave, flushed in one batched application
+        (:meth:`~repro.core.sequence.SequencePlan.apply_batched`; exact
+        per slice, since rotations act row-wise).
       k_delay: waves buffered per flush (the SS5.1 delay depth).
       method: dispatch method for the flush; ``"auto"`` consults the
         registry cost model + plan cache (once — see ``plan``).
@@ -51,14 +55,16 @@ class DelayedRotationBuffer:
         if k_delay < 1:
             raise ValueError(f"k_delay must be >= 1, got {k_delay}")
         self._M = jnp.asarray(M)
-        if self._M.ndim != 2:
-            raise ValueError(f"accumulator must be 2D, got {self._M.shape}")
+        if self._M.ndim not in (2, 3):
+            raise ValueError(
+                f"accumulator must be 2D (m, n) or batched 3D (b, m, n), "
+                f"got {self._M.shape}")
         self.k_delay = int(k_delay)
         self.method = method
         self.autotune = autotune
         self.pad_flush = bool(pad_flush)
         self.apply_kw = dict(apply_kw)
-        self.planes = self._M.shape[1] - 1
+        self.planes = self._M.shape[-1] - 1
         self.flushes = 0
         self.waves_pushed = 0
         self._c: list = []
@@ -84,7 +90,7 @@ class DelayedRotationBuffer:
         if c.shape[0] != self.planes or s.shape[0] != self.planes:
             raise ValueError(
                 f"wave has {c.shape[0]} planes; accumulator with "
-                f"{self._M.shape[1]} columns needs {self.planes}")
+                f"{self._M.shape[-1]} columns needs {self.planes}")
         self._c.append(c)
         self._s.append(s)
         self._g.append(None if g is None
@@ -155,9 +161,14 @@ class DelayedRotationBuffer:
             else:
                 plan = plan.rebind(seq)
             # host-driven accumulation is never differentiated through;
-            # apply_direct skips the custom_vjp wrapper (and keeps the
-            # backend's native autodiff semantics if anyone ever does)
-            self._M = plan.apply_direct(self._M)
+            # the direct paths skip the custom_vjp wrapper (and keep the
+            # backend's native autodiff semantics if anyone ever does).
+            # A batched accumulator flushes all b bases through one
+            # batched application of the same frozen plan.
+            if self._M.ndim == 3:
+                self._M = plan.apply_batched(self._M, direct=True)
+            else:
+                self._M = plan.apply_direct(self._M)
             self._c.clear()
             self._s.clear()
             self._g.clear()

@@ -1,9 +1,17 @@
-"""Serving launcher: batched greedy decoding with the ServeEngine.
+"""Serving launcher: batched LM decoding, or batched rotation serving.
 
-Example::
+LM mode (default) drives the ServeEngine::
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
       --reduced --batch 4 --max-new 16
+
+Rotation mode drives the shape-bucketed RotationService end-to-end: a
+mixed-shape stream of recorded rotation sequences is admitted into
+buckets, executed through one frozen plan per bucket, checked against
+per-request application, and timed::
+
+  PYTHONPATH=src python -m repro.launch.serve --rotations \
+      --requests 64 --slots 8
 """
 from __future__ import annotations
 
@@ -17,15 +25,7 @@ from repro.models import build_model
 from repro.serve import ServeEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args()
-
+def _run_lm(args) -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -43,6 +43,70 @@ def main():
     for p, o in zip(prompts, outs):
         print(f"prompt {p} -> {o}")
     print(f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s batched)")
+
+
+def _run_rotations(args) -> None:
+    import jax.numpy as jnp
+
+    from repro.core.registry import plan_cache_stats
+    from repro.serve import RotationService
+    from repro.serve.rotations import synthetic_stream
+
+    # canonical mixed-shape stream: >= 3 shape buckets by construction
+    requests = synthetic_stream(args.requests, seed=args.seed)
+
+    svc = RotationService(slots=args.slots, autotune=args.autotune)
+    misses0 = plan_cache_stats()["misses"]
+    t0 = time.perf_counter()
+    outs = svc.apply_many(requests)
+    jax.block_until_ready(outs[-1])
+    dt = time.perf_counter() - t0
+    resolved = plan_cache_stats()["misses"] - misses0
+
+    if args.check:
+        for (seq, A), out in zip(requests, outs):
+            ref = seq.plan(like=A).apply(A)
+            err = float(jnp.abs(out - ref).max())
+            assert err < 1e-5, f"serving diverged from per-request: {err}"
+        print("check: serving matches per-request application")
+
+    s = svc.stats
+    rps = args.requests / dt
+    print(f"{args.requests} requests in {dt*1e3:.1f} ms "
+          f"({rps:.0f} req/s batched)")
+    print(f"buckets={len(svc._plans)} batches={s['batches']} "
+          f"plans_resolved={s['plans_resolved']} (registry misses "
+          f"{resolved}) warm_plans={s['warm_plans']} "
+          f"padded_slots={s['padded_slots']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rotations", action="store_true",
+                    help="serve rotation-application requests instead of "
+                         "LM decoding")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=24,
+                    help="rotation mode: number of requests to stream")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="rotation mode: per-bucket batch capacity")
+    ap.add_argument("--autotune", action="store_true",
+                    help="rotation mode: measure bucket plans")
+    ap.add_argument("--check", action="store_true",
+                    help="rotation mode: verify against per-request apply")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.rotations:
+        _run_rotations(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --rotations is given")
+    _run_lm(args)
 
 
 if __name__ == "__main__":

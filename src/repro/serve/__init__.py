@@ -1,3 +1,5 @@
 from .engine import ServeEngine
+from .rotations import BucketKey, RotationService, serve_plan_store_path
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "RotationService", "BucketKey",
+           "serve_plan_store_path"]

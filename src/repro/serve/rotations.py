@@ -1,0 +1,367 @@
+"""Batched rotation-application serving: plan once, apply many, at scale.
+
+The paper's amortization argument — pack many rotations per memory pass
+so the cost of touching ``A`` is paid once — extends across *requests*:
+independent ``(sequence, target)`` problems of the same shape can share
+one dispatch decision and one batched memory pass.  Ballard, Demmel &
+Dumitriu make the system-scale version of this point for eigenproblems:
+batching independent instances through one communication schedule is how
+you approach the machine's bandwidth lower bound.
+
+:class:`RotationService` is the serving-shaped realization, modeled on
+:class:`~repro.serve.engine.ServeEngine`'s slot design:
+
+* **shape-bucketed admission** — ``submit(seq, A)`` drops each request
+  into a bucket keyed by ``(m, n, dtype, k_pad, signed)``.  Wave counts
+  are :meth:`~repro.core.sequence.RotationSequence.pad_to`-normalized to
+  the bucket's ``k_pad`` (next power of two — identity padding is an
+  exact, bitwise no-op) so every drain presents one plan-cache-stable
+  problem shape.
+* **one frozen plan per bucket** — the first drain of a bucket resolves
+  the registry exactly once (``seq.plan(like=..., batch=slots)``, so the
+  cost model prices the *batched* problem: a batch-64 bucket can
+  legitimately land on a different backend than a single request);
+  every later drain rebinds the frozen
+  :class:`~repro.core.sequence.SequencePlan` and calls the backend
+  directly via :meth:`~repro.core.sequence.SequencePlan.apply_batched`.
+* **slot padding + per-request unpadding** — partial drains are padded
+  to the bucket's ``slots`` with identity requests (zero targets,
+  identity waves) so the jitted batched computation sees one stable
+  shape; results are sliced back out per ticket.
+* **serialized warm starts** — resolved bucket plans write through to a
+  JSON store next to the registry's persisted plan cache
+  (``~/.cache/repro/serve_plans.json``; same ``REPRO_PLAN_CACHE``
+  override semantics, keyed by JAX version).  A warm service restores
+  them via :meth:`~repro.core.sequence.SequencePlan.from_dict` and
+  performs **zero** new registry resolutions for known buckets.
+
+Bitwise contract: the pure-jnp rotation family (``unoptimized`` /
+``wavefront`` / ``blocked``) is bit-identical between per-request and
+bucketed execution for plain-rotation and per-entry-sign sequences
+(identity padding, slot padding, and vmap are all exact).  Two paths
+agree to dtype accuracy rather than bitwise: the ``accumulated``/MXU
+family (reassociates into GEMMs), and all-reflector sequences (the
+bucket normalizes ``reflect=True`` to a sign grid, whose XLA fusion
+differs in low-order bits from the scalar ``reflect`` path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["RotationService", "BucketKey", "serve_plan_store_path",
+           "synthetic_stream"]
+
+_STORE_FORMAT = 1
+
+# canonical mixed-shape demo workload (>= 3 buckets by construction),
+# shared by `repro.launch.serve --rotations` and benchmarks/bench_serve
+# so the CI bucket-count invariants track one definition
+DEMO_SHAPES = ((16, 32, 8), (32, 32, 8), (16, 64, 12))
+
+
+def synthetic_stream(n_requests: int, *, shapes=DEMO_SHAPES, seed: int = 0):
+    """Seeded mixed-shape ``(sequence, target)`` request stream."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.rotations import random_sequence
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        m, n, k = shapes[i % len(shapes)]
+        A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        out.append((random_sequence(jax.random.key(seed + i), n, k), A))
+    return out
+
+
+def serve_plan_store_path() -> Optional[str]:
+    """Default on-disk store for serialized bucket plans.
+
+    Lives next to the registry's persisted plan cache and follows the
+    same ``REPRO_PLAN_CACHE`` override: when plan persistence is off,
+    serving still works — it just re-plans each bucket once per process.
+    """
+    from repro.core import registry
+
+    base = registry.plan_cache_path()
+    if base is None:
+        return None
+    return os.path.join(os.path.dirname(base), "serve_plans.json")
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (max(1, x) - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """Shape/dtype class of one admission bucket.
+
+    Both the target dtype and the *wave* dtype participate: stacking
+    float32 and float64 waves in one bucket would silently promote the
+    whole batch and break the bitwise per-request contract.
+    """
+    m: int
+    n: int
+    dtype: str
+    k_pad: int
+    signed: bool
+    wave_dtype: str
+
+    def as_list(self) -> list:
+        return [self.m, self.n, self.dtype, self.k_pad, self.signed,
+                self.wave_dtype]
+
+    @classmethod
+    def from_list(cls, parts) -> "BucketKey":
+        m, n, dtype, k_pad, signed, wave_dtype = parts
+        return cls(int(m), int(n), str(dtype), int(k_pad), bool(signed),
+                   str(wave_dtype))
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    seq: "object"   # pad_to/sign-normalized RotationSequence
+    A: "object"
+
+
+class RotationService:
+    """Shape-bucketed, batched rotation-application service.
+
+    Args:
+      slots: per-bucket batch capacity.  Admission auto-drains a bucket
+        the moment it fills (``ServeEngine``-style slots); partial
+        drains are padded to ``slots`` with identity requests so the
+        batched computation keeps one stable shape.
+      method: dispatch method for bucket plans (``"auto"`` prices the
+        *batched* problem through the registry cost model).
+      autotune: measure candidate plans when first resolving a bucket.
+      pad_waves: normalize each request's wave count to the bucket's
+        next-power-of-two ``k_pad`` (exact identity padding).  With
+        ``False``, the raw wave count becomes part of the bucket key.
+      min_k_pad: floor for ``k_pad`` (avoids one bucket per tiny k).
+      store: path for the serialized-plan store; ``None`` uses
+        :func:`serve_plan_store_path` (which respects
+        ``REPRO_PLAN_CACHE=off``), ``False`` disables persistence.
+      warm_start: load serialized plans from ``store`` at construction.
+      plan_kw: extra kwargs forwarded to ``RotationSequence.plan`` when
+        a bucket is first resolved (e.g. explicit ``n_b``/``k_b``).
+    """
+
+    def __init__(self, *, slots: int = 8, method: str = "auto",
+                 autotune: bool = False, pad_waves: bool = True,
+                 min_k_pad: int = 4, store=None, warm_start: bool = True,
+                 **plan_kw):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.slots = int(slots)
+        self.method = method
+        self.autotune = autotune
+        self.pad_waves = bool(pad_waves)
+        self.min_k_pad = int(min_k_pad)
+        self.plan_kw = dict(plan_kw)
+        if store is False:
+            self._store_path = None
+        else:
+            self._store_path = store if store is not None \
+                else serve_plan_store_path()
+        self._queues: Dict[BucketKey, List[_Pending]] = {}
+        self._plans: Dict[BucketKey, "object"] = {}   # frozen SequencePlan
+        self._warm: Dict[BucketKey, dict] = {}        # serialized, unbound
+        self._results: Dict[int, "object"] = {}
+        self._next_ticket = 0
+        self.stats = {"requests": 0, "batches": 0, "plans_resolved": 0,
+                      "warm_plans": 0, "padded_slots": 0, "padded_waves": 0}
+        if warm_start:
+            self._load_store()
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        pending = sum(len(q) for q in self._queues.values())
+        return (f"RotationService(slots={self.slots}, "
+                f"buckets={len(self._queues)}, pending={pending}, "
+                f"plans={len(self._plans)})")
+
+    # -- admission ---------------------------------------------------------
+    def _bucket_key(self, seq, A) -> BucketKey:
+        m, n = A.shape
+        if seq.n != n:
+            raise ValueError(
+                f"sequence on {seq.n} columns cannot serve a target with "
+                f"{n} columns")
+        k_pad = max(self.min_k_pad, _next_pow2(seq.k)) if self.pad_waves \
+            else seq.k
+        signed = seq.sign is not None or bool(seq.reflect)
+        return BucketKey(m=int(m), n=int(n), dtype=str(A.dtype),
+                         k_pad=int(k_pad), signed=signed,
+                         wave_dtype=str(seq.dtype))
+
+    def _normalize(self, seq, key: BucketKey):
+        """pad_to the bucket wave count; signed buckets materialize the
+        per-entry sign grid so every sequence shares one structure."""
+        if seq.k < key.k_pad:
+            self.stats["padded_waves"] += key.k_pad - seq.k
+            seq = seq.pad_to(key.k_pad)
+        if key.signed:
+            seq = seq.with_signs()
+        return seq
+
+    def submit(self, seq, A) -> int:
+        """Admit one request; returns a ticket for :meth:`result`.
+
+        A full bucket drains immediately (slot semantics); otherwise the
+        request waits for :meth:`drain` / :meth:`result`.
+        """
+        import jax.numpy as jnp
+
+        A = jnp.asarray(A)
+        if A.ndim != 2:
+            raise ValueError(f"targets must be 2D (m, n); got {A.shape}")
+        key = self._bucket_key(seq, A)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.stats["requests"] += 1
+        queue = self._queues.setdefault(key, [])
+        queue.append(_Pending(ticket, self._normalize(seq, key), A))
+        if len(queue) >= self.slots:
+            self._drain_bucket(key)
+        return ticket
+
+    def apply_many(self, pairs) -> list:
+        """Convenience: submit ``(seq, A)`` pairs, drain, return results
+        in submission order."""
+        tickets = [self.submit(seq, A) for seq, A in pairs]
+        self.drain()
+        return [self.result(t) for t in tickets]
+
+    # -- execution ---------------------------------------------------------
+    def drain(self) -> None:
+        """Execute every non-empty bucket (partial batches padded)."""
+        for key in list(self._queues):
+            if self._queues[key]:
+                self._drain_bucket(key)
+
+    def result(self, ticket: int):
+        """Return (and forget) one request's rotated target, draining
+        its bucket if still pending."""
+        if ticket not in self._results:
+            self.drain()
+        if ticket not in self._results:
+            raise KeyError(f"unknown or already-collected ticket {ticket}")
+        return self._results.pop(ticket)
+
+    def _bucket_plan(self, key: BucketKey, rep_seq, like):
+        """The bucket's frozen plan: warm store first, registry once."""
+        from repro.core.sequence import SequencePlan
+
+        plan = self._plans.get(key)
+        if plan is not None:
+            return plan
+        warm = self._warm.get(key)
+        if warm is not None:
+            try:
+                plan = SequencePlan.from_dict(warm, rep_seq)
+                self.stats["warm_plans"] += 1
+            except ValueError:
+                plan = None  # stale entry: fall through to the registry
+        if plan is None:
+            plan = rep_seq.plan(like=like, method=self.method,
+                                autotune=self.autotune, batch=self.slots,
+                                **self.plan_kw)
+            self.stats["plans_resolved"] += 1
+            self._warm[key] = plan.to_dict()
+            self._save_store()
+        self._plans[key] = plan
+        return plan
+
+    def _drain_bucket(self, key: BucketKey) -> None:
+        import jax.numpy as jnp
+
+        from repro.core.sequence import RotationSequence
+
+        queue = self._queues.get(key, [])
+        if not queue:
+            return
+        batch, self._queues[key] = queue[: self.slots], queue[self.slots:]
+        seqs = [p.seq for p in batch]
+        targets = [p.A for p in batch]
+        pad = self.slots - len(batch)
+        if pad:  # identity requests keep the jitted shape slot-stable
+            self.stats["padded_slots"] += pad
+            ident = RotationSequence.identity(key.n, key.k_pad,
+                                              dtype=seqs[0].dtype)
+            if key.signed:
+                ident = ident.with_signs()
+            zero = jnp.zeros((key.m, key.n), targets[0].dtype)
+            seqs = seqs + [ident] * pad
+            targets = targets + [zero] * pad
+        A = jnp.stack(targets)
+        plan = self._bucket_plan(key, seqs[0], A)
+        out = plan.apply_batched(A, sequences=seqs)
+        self.stats["batches"] += 1
+        for i, p in enumerate(batch):  # per-request unpadding
+            self._results[p.ticket] = out[i]
+        if self._queues[key]:
+            self._drain_bucket(key)
+
+    # -- serialized plan store ---------------------------------------------
+    # (shares the registry cache's invalidation + atomic-write plumbing:
+    # _read_versioned_json / _atomic_write_json live in core.registry)
+
+    def _load_store(self) -> int:
+        """Merge serialized bucket plans from disk; returns count loaded.
+
+        Mirrors the registry's persisted-cache invalidation: a missing/
+        corrupt file, a different format, or a different JAX version is
+        ignored wholesale (individual entries are additionally validated
+        by ``SequencePlan.from_dict`` when first bound).
+        """
+        from repro.core import registry
+
+        path = self._store_path
+        if path is None:
+            return 0
+        payload = registry._read_versioned_json(path, _STORE_FORMAT)
+        if payload is None:
+            return 0
+        loaded = 0
+        for entry in payload.get("plans", []):
+            try:
+                key = BucketKey.from_list(entry["bucket"])
+                plan_dict = dict(entry["plan"])
+            except (KeyError, TypeError, ValueError):
+                continue
+            self._warm.setdefault(key, plan_dict)
+            loaded += 1
+        return loaded
+
+    def _save_store(self) -> Optional[str]:
+        """Atomically write-through all known bucket plans (best-effort
+        read-merge-replace, same courtesy as ``save_plan_cache``)."""
+        from repro.core import registry
+
+        path = self._store_path
+        if path is None:
+            return None
+        merged: Dict[Tuple, dict] = {}
+        on_disk = registry._read_versioned_json(path, _STORE_FORMAT)
+        if on_disk is not None:
+            for entry in on_disk.get("plans", []):
+                try:
+                    merged[tuple(entry["bucket"])] = entry
+                except (KeyError, TypeError):
+                    continue
+        for key, plan_dict in self._warm.items():
+            merged[tuple(key.as_list())] = {"bucket": key.as_list(),
+                                            "plan": plan_dict}
+        if not merged:
+            return None
+        payload = {"format": _STORE_FORMAT,
+                   "jax": registry._jax_version_str(),
+                   "plans": list(merged.values())}
+        return registry._atomic_write_json(path, payload,
+                                           prefix=".serve_plans.")

@@ -1,0 +1,451 @@
+"""Batched plan-once/apply-many serving: SequencePlan.apply_batched,
+plan serialization, the shape-bucketed RotationService, the batch-aware
+cost model, and the persisted-plan merge path."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.registry import clear_plan_cache, plan_cache_stats, select_plan
+from repro.core.rotations import random_sequence
+from repro.core.sequence import RotationSequence, SequencePlan
+from repro.serve import RotationService, serve_plan_store_path
+
+
+def _stream(n_requests=24, seed=0, shapes=None):
+    """Mixed-shape request stream covering >= 3 buckets."""
+    from repro.serve.rotations import DEMO_SHAPES, synthetic_stream
+
+    return synthetic_stream(n_requests, seed=seed,
+                            shapes=shapes or DEMO_SHAPES)
+
+
+# ------------------------------------------------ apply_batched (core) ----
+
+@pytest.mark.parametrize("method,kw", [
+    ("unoptimized", {}), ("wavefront", {}),
+    ("blocked", dict(n_b=8, k_b=4)), ("accumulated", dict(n_b=8, k_b=4)),
+])
+def test_apply_batched_shared_sequence_bitwise(method, kw):
+    """One sequence, batched targets: flatten/vmap must equal b separate
+    applies bit-for-bit (rotations act row-wise)."""
+    rng = np.random.default_rng(1)
+    b, m, n, k = 4, 8, 12, 6
+    A = jnp.asarray(rng.standard_normal((b, m, n)), jnp.float32)
+    seq = random_sequence(jax.random.key(0), n, k)
+    plan = seq.plan(like=A, method=method, **kw)
+    out = plan.apply_batched(A)
+    ref = jnp.stack([plan.apply(A[i]) for i in range(b)])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_apply_batched_per_request_sequences_bitwise():
+    """Each batch element with its own waves == per-request application."""
+    rng = np.random.default_rng(2)
+    b, m, n, k = 6, 8, 12, 6
+    A = jnp.asarray(rng.standard_normal((b, m, n)), jnp.float32)
+    seqs = [random_sequence(jax.random.key(i), n, k) for i in range(b)]
+    plan = seqs[0].plan(like=A, method="blocked", n_b=8, k_b=4)
+    out = plan.apply_batched(A, sequences=seqs)
+    ref = jnp.stack([
+        s.plan(like=A[i], method="blocked", n_b=8, k_b=4).apply(A[i])
+        for i, s in enumerate(seqs)])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_apply_batched_grad_through_flatten():
+    rng = np.random.default_rng(3)
+    b, m, n, k = 3, 5, 9, 4
+    A = jnp.asarray(rng.standard_normal((b, m, n)), jnp.float32)
+    seq = random_sequence(jax.random.key(0), n, k)
+    plan = seq.plan(like=A, method="blocked", n_b=8, k_b=4)
+    g = jax.grad(lambda x: (plan.apply_batched(x) ** 2).sum())(A)
+    eps = 1e-3
+    d = jnp.zeros_like(A).at[1, 2, 3].set(eps)
+    f = lambda x: float((plan.apply_batched(x) ** 2).sum())
+    fd = (f(A + d) - f(A - d)) / (2 * eps)
+    assert abs(fd - float(g[1, 2, 3])) < 5e-2 * max(1.0, abs(fd))
+
+
+def test_apply_batched_validation():
+    seq = random_sequence(jax.random.key(0), 8, 4)
+    A3 = jnp.zeros((2, 5, 8))
+    plan = seq.plan(like=A3)
+    with pytest.raises(ValueError, match=r"\(b, m, n\)"):
+        plan.apply_batched(jnp.zeros((5, 8)))
+    with pytest.raises(ValueError, match="sequences for a batch"):
+        plan.apply_batched(A3, sequences=[seq])
+    with pytest.raises(ValueError, match="pad_to"):
+        plan.apply_batched(
+            A3, sequences=[seq, random_sequence(jax.random.key(1), 8, 6)])
+    with pytest.raises(ValueError, match="sign/reflect"):
+        plan.apply_batched(A3, sequences=[seq, seq.with_signs()])
+
+
+# ------------------------------------------------ batch-aware planning ----
+
+def test_cost_model_is_batch_aware():
+    """Shared-sequence batches amortize the accumulated path's Q_t setup,
+    so auto can pick a different backend at batch 64 than at batch 1."""
+    clear_plan_cache()
+    p1 = select_plan(4, 256, 256, platform="cpu")
+    p64 = select_plan(4, 256, 256, platform="cpu", batch=64)
+    assert p1.method in ("blocked", "wavefront", "unoptimized")
+    assert p64.method == "accumulated"
+    # distinct cache keys: batch-64 entry must not shadow batch-1
+    before = plan_cache_stats()
+    assert select_plan(4, 256, 256, platform="cpu") == p1
+    assert select_plan(4, 256, 256, platform="cpu", batch=64) == p64
+    after = plan_cache_stats()
+    assert after["hits"] == before["hits"] + 2
+    assert after["misses"] == before["misses"]
+    clear_plan_cache()
+
+
+def test_plan_accepts_batched_like():
+    seq = random_sequence(jax.random.key(0), 16, 4)
+    A = jnp.zeros((8, 5, 16))
+    plan = seq.plan(like=A)  # 3D like: batch and m inferred
+    out = plan.apply_batched(A)
+    assert out.shape == A.shape
+
+
+# --------------------------------------------------- plan serialization ----
+
+def test_sequence_plan_dict_roundtrip_bitwise():
+    rng = np.random.default_rng(4)
+    m, n, k = 12, 16, 8
+    A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    seq = random_sequence(jax.random.key(0), n, k)
+    plan = seq.plan(like=A)
+    d = json.loads(json.dumps(plan.to_dict()))  # through real JSON
+    plan2 = SequencePlan.from_dict(d, seq)
+    assert plan2.method == plan.method
+    assert dict(plan2.kwargs) == dict(plan.kwargs)
+    np.testing.assert_array_equal(np.asarray(plan2.apply(A)),
+                                  np.asarray(plan.apply(A)))
+
+
+def test_sequence_plan_from_dict_rejects_stale_and_mismatched():
+    seq = random_sequence(jax.random.key(0), 16, 8)
+    plan = seq.plan(m=8)
+    d = plan.to_dict()
+    stale = dict(d, jax="0.0.1")
+    with pytest.raises(ValueError, match="JAX"):
+        SequencePlan.from_dict(stale, seq)
+    with pytest.raises(ValueError, match="wave shape"):
+        SequencePlan.from_dict(d, seq.pad_to(12))
+    with pytest.raises(ValueError, match="sign/reflect"):
+        SequencePlan.from_dict(d, seq.with_signs())
+    with pytest.raises(ValueError, match="format"):
+        SequencePlan.from_dict(dict(d, format=99), seq)
+    with pytest.raises(ValueError, match="unknown method"):
+        SequencePlan.from_dict(dict(d, method="gone"), seq)
+
+
+def test_rotation_sequence_dict_roundtrip():
+    seq = random_sequence(jax.random.key(5), 10, 3).with_signs()
+    d = json.loads(json.dumps(seq.to_dict()))
+    back = RotationSequence.from_dict(d)
+    np.testing.assert_array_equal(np.asarray(back.cos), np.asarray(seq.cos))
+    np.testing.assert_array_equal(np.asarray(back.sin), np.asarray(seq.sin))
+    np.testing.assert_array_equal(np.asarray(back.sign),
+                                  np.asarray(seq.sign))
+
+
+# -------------------------------------------------------- the service ----
+
+def test_service_bitwise_and_one_plan_per_bucket():
+    """Acceptance: mixed-shape stream (3 buckets, batch 8) bit-identical
+    to per-request seq.plan(like=A).apply(A), exactly one registry
+    resolution per bucket."""
+    clear_plan_cache()
+    requests = _stream(24)
+    refs = [seq.plan(like=A).apply(A) for seq, A in requests]
+
+    misses0 = plan_cache_stats()["misses"]
+    svc = RotationService(slots=8, store=False)
+    outs = svc.apply_many(requests)
+    assert plan_cache_stats()["misses"] - misses0 == 3  # one per bucket
+    assert svc.stats["plans_resolved"] == 3
+    assert svc.stats["batches"] == 3
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    # steady state: later passes rebind the frozen plans, zero new
+    # registry work
+    misses1 = plan_cache_stats()["misses"]
+    outs2 = svc.apply_many(requests)
+    assert plan_cache_stats()["misses"] == misses1
+    assert svc.stats["plans_resolved"] == 3
+    for out, ref in zip(outs2, refs):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    clear_plan_cache()
+
+
+def test_service_partial_batch_pads_slots():
+    clear_plan_cache()
+    requests = _stream(5, shapes=((16, 32, 8),))  # one bucket, 5 < slots
+    refs = [seq.plan(like=A).apply(A) for seq, A in requests]
+    svc = RotationService(slots=8, store=False)
+    outs = svc.apply_many(requests)
+    assert svc.stats["padded_slots"] == 3
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    clear_plan_cache()
+
+
+def test_service_signed_and_reflect_requests():
+    """Sign-carrying and reflector sequences bucket separately from plain
+    rotations; signed requests stay bit-identical to per-request
+    application.  All-reflector requests are normalized to the per-entry
+    sign grid, whose XLA fusion differs in low-order bits from the
+    scalar ``reflect=True`` path a lone request takes — those agree to
+    dtype accuracy instead."""
+    clear_plan_cache()
+    rng = np.random.default_rng(7)
+    m, n, k = 16, 24, 8
+    requests, reflect_rows = [], set()
+    for i in range(9):
+        A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        seq = random_sequence(jax.random.key(i), n, k)
+        if i % 3 == 1:
+            sign = jnp.where(
+                jax.random.bernoulli(jax.random.key(100 + i), 0.5,
+                                     seq.cos.shape), 1.0, -1.0)
+            seq = RotationSequence(seq.cos, seq.sin, sign)
+        elif i % 3 == 2:
+            seq = RotationSequence(seq.cos, seq.sin, None, True)
+            reflect_rows.add(i)
+        requests.append((seq, A))
+    refs = [seq.plan(like=A).apply(A) for seq, A in requests]
+    svc = RotationService(slots=4, store=False)
+    outs = svc.apply_many(requests)
+    # plain bucket + signed bucket (sign-carrying and reflect normalize
+    # to the same per-entry-sign structure)
+    assert svc.stats["plans_resolved"] == 2
+    for i, (out, ref) in enumerate(zip(outs, refs)):
+        if i in reflect_rows:
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=5e-6, rtol=1e-4)
+        else:
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    clear_plan_cache()
+
+
+def test_service_wave_padding_buckets_by_pow2():
+    clear_plan_cache()
+    svc = RotationService(slots=8, store=False)
+    rng = np.random.default_rng(8)
+    A = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    t1 = svc.submit(random_sequence(jax.random.key(0), 16, 5), A)
+    t2 = svc.submit(random_sequence(jax.random.key(1), 16, 7), A)
+    svc.drain()
+    # k=5 and k=7 share the k_pad=8 bucket
+    assert svc.stats["plans_resolved"] == 1
+    assert svc.stats["padded_waves"] == (8 - 5) + (8 - 7)
+    svc.result(t1), svc.result(t2)
+    with pytest.raises(KeyError):
+        svc.result(t1)  # results are collected exactly once
+    clear_plan_cache()
+
+
+def test_service_warm_restart_zero_resolutions(tmp_path):
+    """Acceptance: a warm restart from serialized plans performs zero new
+    registry plan resolutions and reproduces results exactly."""
+    clear_plan_cache()
+    store = str(tmp_path / "serve_plans.json")
+    requests = _stream(24)
+    svc = RotationService(slots=8, store=store)
+    outs = svc.apply_many(requests)
+    assert svc.stats["plans_resolved"] == 3
+    assert os.path.exists(store)
+
+    # "new process": plan cache cold, service warm from the store
+    clear_plan_cache()
+    misses0 = plan_cache_stats()["misses"]
+    warm = RotationService(slots=8, store=store)
+    outs2 = warm.apply_many(requests)
+    assert warm.stats["plans_resolved"] == 0
+    assert warm.stats["warm_plans"] == 3
+    assert plan_cache_stats()["misses"] == misses0
+    for a, b in zip(outs, outs2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    clear_plan_cache()
+
+
+def test_service_warm_store_rejects_stale_jax(tmp_path):
+    clear_plan_cache()
+    store = str(tmp_path / "serve_plans.json")
+    requests = _stream(8, shapes=((16, 32, 8),))
+    RotationService(slots=8, store=store).apply_many(requests)
+    payload = json.loads(open(store).read())
+    payload["jax"] = "0.0.1"
+    open(store, "w").write(json.dumps(payload))
+    svc = RotationService(slots=8, store=store)
+    svc.apply_many(requests)
+    assert svc.stats["warm_plans"] == 0  # stale file ignored wholesale
+    assert svc.stats["plans_resolved"] == 1
+    clear_plan_cache()
+
+
+def test_service_warm_store_ignores_corrupt_file(tmp_path):
+    store = tmp_path / "serve_plans.json"
+    store.write_text("{not json")
+    svc = RotationService(slots=4, store=str(store))
+    outs = svc.apply_many(_stream(4, shapes=((8, 16, 4),)))
+    assert len(outs) == 4
+
+
+def test_service_functional_with_persistence_off(monkeypatch):
+    """REPRO_PLAN_CACHE=off disables the store but not serving."""
+    monkeypatch.setenv("REPRO_PLAN_CACHE", "off")
+    assert serve_plan_store_path() is None
+    clear_plan_cache()
+    requests = _stream(12)
+    refs = [seq.plan(like=A).apply(A) for seq, A in requests]
+    svc = RotationService(slots=4)  # default store resolves to None
+    outs = svc.apply_many(requests)
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    clear_plan_cache()
+
+
+def test_service_rejects_bad_requests():
+    svc = RotationService(slots=2, store=False)
+    seq = random_sequence(jax.random.key(0), 16, 4)
+    with pytest.raises(ValueError, match="columns"):
+        svc.submit(seq, jnp.zeros((4, 8)))
+    with pytest.raises(ValueError, match="2D"):
+        svc.submit(seq, jnp.zeros((2, 4, 16)))
+    with pytest.raises(ValueError, match="slots"):
+        RotationService(slots=0)
+
+
+# ------------------------------------------- batched delayed buffer ----
+
+def test_delayed_buffer_batched_accumulator_matches_slices():
+    from repro.eig.delayed import DelayedRotationBuffer
+
+    rng = np.random.default_rng(9)
+    b, m, n = 3, 8, 10
+    M = jnp.asarray(rng.standard_normal((b, m, n)), jnp.float32)
+    buf = DelayedRotationBuffer(M, k_delay=4)
+    slices = [DelayedRotationBuffer(M[i], k_delay=4) for i in range(b)]
+    for _ in range(7):  # forces one full flush + one padded flush
+        th = rng.standard_normal(n - 1)
+        buf.push(np.cos(th), np.sin(th))
+        for s in slices:
+            s.push(np.cos(th), np.sin(th))
+    out = buf.value
+    assert buf.flushes == 2
+    for i, s in enumerate(slices):
+        np.testing.assert_array_equal(np.asarray(out[i]),
+                                      np.asarray(s.value))
+
+
+def test_delayed_buffer_rejects_wrong_rank():
+    from repro.eig.delayed import DelayedRotationBuffer
+
+    with pytest.raises(ValueError, match="accumulator"):
+        DelayedRotationBuffer(jnp.zeros((2, 3, 4, 5)))
+
+
+# ------------------------------- persisted plan cache: merge small fix ----
+
+def test_autotune_upgrades_interpolated_and_persists_once(tmp_path,
+                                                          monkeypatch):
+    """An interpolated entry upgraded by autotune is measured (its tiles
+    join the candidate set) and persisted exactly once — no duplicate
+    keys on merge, across repeated saves."""
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(path))
+    clear_plan_cache()
+    try:
+        donor = select_plan(16, 48, 6, platform="cpu", autotune=True,
+                            autotune_top=2)
+        assert donor.source == "measured"
+        borrowed = select_plan(20, 64, 8, platform="cpu")
+        assert borrowed.source == "interpolated"
+        upgraded = select_plan(20, 64, 8, platform="cpu", autotune=True,
+                               autotune_top=1)
+        assert upgraded.source == "measured"
+        registry.save_plan_cache()
+        registry.save_plan_cache()  # idempotent: still one entry per key
+        payload = json.loads(path.read_text())
+        keys = [tuple(e["key"]) for e in payload["plans"]]
+        assert len(keys) == len(set(keys))  # no duplicate keys
+        assert (20, 64, 8, "float32", "cpu", False, False) in keys
+        # interpolated entries themselves are never persisted
+        clear_plan_cache()
+        loaded = registry.load_plan_cache()
+        assert loaded == 2
+        assert all(p.source == "persisted"
+                   for p in registry._PLAN_CACHE.values())
+    finally:
+        clear_plan_cache()
+
+
+def test_save_merge_concurrent_writers_same_key(tmp_path, monkeypatch):
+    """Two writers sharing a key: merge keeps one entry, last writer's
+    measurement wins, foreign keys survive."""
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(path))
+    clear_plan_cache()
+    try:
+        key = (8, 8, 4, "float32", "cpu", False, False)
+        other = (16, 16, 8, "float32", "cpu", False, False)
+        registry._PLAN_CACHE[key] = registry.Plan(
+            method="blocked", n_b=8, k_b=4, est_seconds=1e-6,
+            source="measured")
+        registry._PLAN_CACHE[other] = registry.Plan(
+            method="accumulated", n_b=16, k_b=16, est_seconds=2e-6,
+            source="measured")
+        registry.save_plan_cache()
+        # "writer B": same key, fresh measurement, no knowledge of
+        # `other`
+        clear_plan_cache()
+        registry._PLAN_CACHE[key] = registry.Plan(
+            method="blocked", n_b=16, k_b=8, est_seconds=5e-7,
+            source="measured")
+        registry.save_plan_cache()
+        payload = json.loads(path.read_text())
+        keys = [tuple(e["key"]) for e in payload["plans"]]
+        assert len(keys) == len(set(keys)) == 2  # exactly once per key
+        clear_plan_cache()
+        assert registry.load_plan_cache() == 2
+        assert registry._PLAN_CACHE[key].n_b == 16  # B's write won
+        assert registry._PLAN_CACHE[other].method == "accumulated"
+    finally:
+        clear_plan_cache()
+
+
+# --------------------------------------------- regression-compare gate ----
+
+def test_compare_baseline_check_semantics():
+    import importlib.util
+    import pathlib
+
+    spec = importlib.util.spec_from_file_location(
+        "compare_baseline",
+        pathlib.Path(__file__).parent.parent / "benchmarks"
+        / "compare_baseline.py")
+    cb = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cb)
+
+    count = dict(higher_is_better=False, rel_tol=0.0, count=True)
+    assert cb._check("c", count, 3, 3)[0]
+    assert not cb._check("c", count, 3, 4)[0]
+    rate_hi = dict(higher_is_better=True, rel_tol=0.30)
+    assert cb._check("r", rate_hi, 100.0, 71.0)[0]
+    assert not cb._check("r", rate_hi, 100.0, 69.0)[0]
+    assert cb._check("r", rate_hi, 100.0, 250.0)[0]  # improvement
+    rate_lo = dict(higher_is_better=False, rel_tol=0.30, abs_floor=500.0)
+    assert cb._check("o", rate_lo, 100.0, 129.0)[0]
+    assert cb._check("o", rate_lo, 100.0, 400.0)[0]  # under abs floor
+    assert not cb._check("o", rate_lo, 100.0, 600.0)[0]
