@@ -41,7 +41,7 @@ compat-gate:
 # (apply_rotation_sequence / DelayedRotationBuffer) — never a backend or
 # kernel module directly, or the cost model + plan cache are bypassed.
 eig-gate:
-	@! grep -rnE 'repro\.kernels|core\.(blocked|accumulate|ref)\b|rot_sequence_(blocked|accumulated|unoptimized|wavefront|wave|mxu)' \
+	@! grep -rnE 'repro\.kernels|core\.(blocked|accumulate|ref)\b|rot_sequence_(blocked|accumulated|unoptimized|wavefront|wave|mxu|batched)' \
 		--include='*.py' src/repro/eig \
 		|| { echo 'eig-gate FAILED: src/repro/eig must go through the dispatch registry (see matches above)'; exit 1; }
 	@echo 'eig-gate OK'
@@ -58,13 +58,15 @@ seq-gate:
 	@echo 'seq-gate OK'
 
 # The serving path (RotationService + launch/serve.py) must apply
-# rotations only through SequencePlan / RotationSequence — never the
-# raw-array compat wrapper, a backend module, or a kernel directly —
-# or bucket plans stop being the single dispatch point.
+# rotations only through SequencePlan / RotationSequence (which route
+# bucket drains to the fused rotseq_batched backend or the per-request
+# vmap/loop fallback) — never the raw-array compat wrapper, a backend
+# module, or a kernel (the fused one included) directly — or bucket
+# plans stop being the single dispatch point.
 serve-gate:
-	@! grep -rnE 'apply_rotation_sequence\s*\(|repro\.kernels|core\.(blocked|accumulate|ref)\b|rot_sequence_(blocked|accumulated|unoptimized|wavefront|wave|mxu)' \
+	@! grep -rnE 'apply_rotation_sequence\s*\(|repro\.kernels|core\.(blocked|accumulate|ref)\b|rot_sequence_(blocked|accumulated|unoptimized|wavefront|wave|mxu|batched)|rotseq_batched_pallas' \
 		--include='*.py' src/repro/serve src/repro/launch/serve.py \
-		|| { echo 'serve-gate FAILED: the serving path must apply rotations through SequencePlan/RotationSequence only (see matches above)'; exit 1; }
+		|| { echo 'serve-gate FAILED: the serving path must apply rotations through SequencePlan/RotationSequence only, fused or vmap (see matches above)'; exit 1; }
 	@echo 'serve-gate OK'
 
 smoke:

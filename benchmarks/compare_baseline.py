@@ -7,7 +7,10 @@ are compared near-exactly — they are deterministic where wall times are
 noisy; rate metrics (interpret-mode Mrot/s, dispatch overhead) fail the
 job when they regress more than ``rel_tol`` (default 30%) past the
 baseline, with an ``abs_floor`` below which micro-timing jitter is
-ignored.  Improvements never fail.
+ignored.  Improvements never fail.  Warn-only rows additionally carry a
+``live_floor``: ordinary noise only warns, but a rate that collapses
+below the absolute floor (e.g. a hung fused kernel driving serve
+throughput to ~0) hard-fails the job.
 
 Usage::
 
@@ -52,11 +55,23 @@ SPEC = {
     # vary >30% even between runs on one machine, so they are tracked
     # as warn-only context rather than gating the job — the gating
     # serving metrics are the counts above (plus the issue-scoped
-    # dispatch-overhead / Mrot/s rates).
+    # dispatch-overhead / Mrot/s rates).  ``live_floor`` is the
+    # absolute liveness backstop under warn-only: noise never fails
+    # the gate, but a rate that *collapses* below the floor (a hung
+    # fused kernel, a serving path that stopped returning) is a real
+    # outage and fails CI instead of warning.
     "serve/bucketed:req_s": dict(higher_is_better=True, rel_tol=0.30,
-                                 warn_only=True),
+                                 warn_only=True, live_floor=1.0),
     "serve/shared_batch:speedup": dict(higher_is_better=True,
-                                       rel_tol=0.30, warn_only=True),
+                                       rel_tol=0.30, warn_only=True,
+                                       live_floor=0.05),
+    # fused one-launch bucket execution vs the per-request vmap/loop
+    # fallback at batch 64 (CPU interpret mode).  Gating, not warn-only:
+    # the abs_floor encodes the acceptance bar — any run >= 1.5x passes
+    # regardless of baseline drift, and a run below it that also misses
+    # the relative band fails.
+    "serve/fused_vs_vmap:speedup": dict(higher_is_better=True,
+                                        rel_tol=0.50, abs_floor=1.5),
 }
 
 
@@ -89,6 +104,29 @@ def _check(name: str, spec: dict, base: float, cur: float):
     return ok, (f"{verdict:9s} {name} [{kind}] "
                 f"baseline={base:.4g} current={cur:.4g} "
                 f"(rel_tol={rel_tol:.0%})")
+
+
+def _evaluate(name: str, spec: dict, base: float, cur: float):
+    """Full row verdict including warn-only + liveness-floor semantics.
+
+    Warn-only rows absorb noise (a relative miss only warns) but never
+    outages: a current value below the absolute ``live_floor`` — or
+    NaN — hard-fails even under ``warn_only`` (a serving rate that
+    collapsed to ~0 is a hung kernel, not jitter).
+    """
+    if spec.get("warn_only"):
+        # the floor is checked unconditionally: a collapsed rate must
+        # fail even when the committed baseline has itself drifted low
+        # enough that the relative band would still be satisfied
+        floor = spec.get("live_floor", 0.0)
+        if cur != cur or cur < floor:
+            return False, (f"DEAD      {name} [liveness] "
+                           f"current={cur:.4g} < live_floor={floor:.4g} "
+                           f"— rate collapsed, failing despite warn-only")
+    ok, msg = _check(name, spec, base, cur)
+    if not ok and spec.get("warn_only"):
+        return True, msg.replace("REGRESSED", "WARN     ") + " [warn-only]"
+    return ok, msg
 
 
 def main() -> None:
@@ -128,10 +166,7 @@ def main() -> None:
             print(f"MISSING   {name} (baseline={base_val:.4g}) — not "
                   f"emitted by the provided artifacts")
             continue
-        ok, msg = _check(name, spec, float(base_val), found[name])
-        if not ok and spec.get("warn_only"):
-            msg = msg.replace("REGRESSED", "WARN     ") + " [warn-only]"
-            ok = True
+        ok, msg = _evaluate(name, spec, float(base_val), found[name])
         print(msg)
         if not ok:
             failures.append(name)

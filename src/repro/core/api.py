@@ -53,13 +53,11 @@ __all__ = ["apply_rotation_sequence", "METHODS", "select_plan"]
 # --------------------------------------------------------------------------
 
 def _run_unoptimized(A, C, S, *, reflect=False, G=None, **kw):
-    assert G is None, "per-entry signs need a blocked method"
-    return rot_sequence_unoptimized(A, C, S, reflect=reflect)
+    return rot_sequence_unoptimized(A, C, S, reflect=reflect, G=G)
 
 
 def _run_wavefront(A, C, S, *, reflect=False, G=None, **kw):
-    assert G is None, "per-entry signs need a blocked method"
-    return rot_sequence_wavefront(A, C, S, reflect=reflect)
+    return rot_sequence_wavefront(A, C, S, reflect=reflect, G=G)
 
 
 def _run_blocked(A, C, S, *, n_b=64, k_b=16, reflect=False, G=None, **kw):
@@ -85,6 +83,16 @@ def _run_pallas_mxu(A, C, S, *, n_b=64, k_b=16, reflect=False, G=None,
     from repro.kernels.rotseq_mxu.ops import rot_sequence_mxu
     return rot_sequence_mxu(A, C, S, n_b=n_b, k_b=k_b, reflect=reflect,
                             G=G, **kw)
+
+
+def _run_rotseq_batched(A, C, S, *, m_blk=256, reflect=False, G=None,
+                        n_b=None, k_b=None, **kw):
+    # n_b/k_b are accepted (and ignored) so seed tile defaults from
+    # named-method planning don't trip the fused kernel, which tiles
+    # only over lanes (whole n stays VMEM-resident).
+    from repro.kernels.rotseq_batched.ops import rot_sequence_batched
+    return rot_sequence_batched(A, C, S, m_blk=m_blk, reflect=reflect,
+                                G=G, **kw)
 
 
 registry.register(BackendSpec(
@@ -144,6 +152,24 @@ registry.register(BackendSpec(
     cost=registry.cost_pallas_mxu,
     candidates=registry.pallas_mxu_tiles,
     doc="Pallas TPU MXU accumulated kernel.",
+))
+
+# The fused multi-request kernel: one launch per serve bucket, grid over
+# (batch, m-blocks), per-wave valid_planes windows skipping pad_to /
+# seq.T identity padding.  batch_via="fused" makes apply_batched hand it
+# the whole (b, m, n) stack (shared or per-request waves) in one call;
+# per-request vmap/loop stays available as the fallback capability on
+# every other backend.
+registry.register(BackendSpec(
+    name="rotseq_batched",
+    fn=_run_rotseq_batched,
+    capability=Capability(platforms=("tpu",), tile_min=(2, 1),
+                          needs_pallas=True, supports_vmap=False,
+                          batch_via="fused"),
+    cost=registry.cost_rotseq_batched,
+    candidates=registry.rotseq_batched_tiles,
+    doc="Fused multi-request Pallas kernel (one launch per bucket, "
+        "identity planes skipped).",
 ))
 
 METHODS = registry.registered_methods()

@@ -30,6 +30,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.rotations import plane_update
+
 __all__ = [
     "pack_sheared",
     "apply_tile",
@@ -98,9 +100,7 @@ def apply_tile(X, Ct, St, Gt):
             s = St[jj, p].astype(X.dtype)
             g = Gt[jj, p].astype(X.dtype)
             xy = jax.lax.dynamic_slice_in_dim(X, jl, 2, axis=1)
-            x, y = xy[:, 0], xy[:, 1]
-            xn = c * x + s * y
-            yn = g * (s * x - c * y)
+            xn, yn = plane_update(xy[:, 0], xy[:, 1], c, s, g)
             return jax.lax.dynamic_update_slice_in_dim(
                 X, jnp.stack([xn, yn], axis=1), jl, axis=1
             )

@@ -1,7 +1,8 @@
 """Backend registry + cost-model dispatch for rotation-sequence application.
 
 Each backend (``unoptimized``, ``wavefront``, ``blocked``, ``accumulated``,
-``pallas_wave``, ``pallas_mxu``) registers a :class:`BackendSpec`:
+``pallas_wave``, ``pallas_mxu``, ``rotseq_batched``) registers a
+:class:`BackendSpec`:
 
 * a **capability record** — supported dtypes, platforms, per-entry sign
   (``G``) support, shard_map compatibility, tile-shape bounds, and whether
@@ -40,7 +41,7 @@ __all__ = [
     "Hardware", "PLATFORMS", "Problem", "Plan", "Capability", "BackendSpec",
     "register", "get_backend", "registered_methods", "eligible_backends",
     "no_tiles", "blocked_tiles", "accumulated_tiles",
-    "pallas_wave_tiles", "pallas_mxu_tiles",
+    "pallas_wave_tiles", "pallas_mxu_tiles", "rotseq_batched_tiles",
     "select_plan", "plan_cache_stats", "clear_plan_cache",
     "plan_cache_path", "save_plan_cache", "load_plan_cache",
 ]
@@ -81,6 +82,12 @@ class Problem:
     signs: bool = False    # needs per-entry G support
     sharded: bool = False  # must be traceable inside shard_map
     batch: int = 1         # independent (m, n) targets per application
+    # live (non-identity) planes in the (n-1, k) grid, when statically
+    # known (RotationSequence.k_live): pad_to tails and seq.T staircase
+    # padding make the live fraction tiny, which only plane-skipping
+    # backends (rotseq_batched) can exploit — their cost scales with
+    # live_planes while every other backend pays the full grid.
+    live_planes: Optional[int] = None
 
     @property
     def itemsize(self) -> int:
@@ -91,6 +98,18 @@ class Problem:
     def m_total(self) -> int:
         """Total rows streamed per application (``batch * m``)."""
         return self.m * max(1, self.batch)
+
+    @property
+    def planes_total(self) -> int:
+        """Planes in the full (n-1, k) grid (identity padding included)."""
+        return max(0, self.n - 1) * self.k
+
+    @property
+    def planes_live(self) -> int:
+        """Statically-known live planes (falls back to the full grid)."""
+        if self.live_planes is None:
+            return self.planes_total
+        return min(self.live_planes, self.planes_total)
 
     @property
     def hardware(self) -> Hardware:
@@ -135,8 +154,11 @@ class Capability:
     # batched execution (SequencePlan.apply_batched): rotations act
     # row-wise, so a shared-sequence batch (b, m, n) flattens exactly to
     # (b*m, n); "vmap" instead maps the backend over the leading axis
-    # (for kernels whose tiling assumptions are per-instance).
-    batch_via: str = "flatten"        # "flatten" | "vmap"
+    # (for kernels whose tiling assumptions are per-instance); "fused"
+    # means the backend fn natively accepts a (b, m, n) target with
+    # shared (n-1, K) or stacked (b, n-1, K) waves — one launch per
+    # bucket (the rotseq_batched kernel).
+    batch_via: str = "flatten"        # "flatten" | "vmap" | "fused"
     supports_vmap: bool = True        # jax.vmap-able over (A, C, S, G)
 
 
@@ -279,6 +301,46 @@ def cost_pallas_mxu(p: Problem, plan: Plan) -> float:
                _LATENCY_FLOOR)
 
 
+# SMEM bytes the fused kernel may spend on one request's C/S/G panels
+# (scalar memory is orders of magnitude smaller than VMEM; serve-bucket
+# grids are a few KB, a (255, 263) staircase panel set is ~800KB and
+# would fail Mosaic compilation)
+_SMEM_PANEL_BUDGET = 128 * 2**10
+
+
+def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
+    """Fused multi-request kernel (SS6 applied across requests).
+
+    One launch streams every batched target through HBM exactly once
+    (the whole ``(n, m_blk)`` slab lives in VMEM for all ``k`` waves, so
+    there is no per-band re-read), the ``3 (n-1) k`` C/S/G panel is
+    read once per batch element, and — unlike every other backend —
+    the flop term scales with the *live* planes: identity padding from
+    ``pad_to`` and ``seq.T`` staircases is skipped, not multiplied
+    through.
+    """
+    hw = p.hardware
+    flops = 6.0 * p.m_total * p.planes_live
+    memops = (2.0 * p.m_total * p.n
+              + 3.0 * max(1, p.batch) * p.planes_total) * p.itemsize
+    secs = _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+    # On-chip residency bounds, priced out rather than hard-filtered:
+    # the (n, m_blk) slab must fit in VMEM for the single-pass
+    # assumption to hold, and the scalar-indexed C/S/G panels live in
+    # SMEM, whose capacity is far smaller — a (n-1, K) grid past the
+    # budget cannot compile on hardware (interpret mode hides this),
+    # so keep auto off the kernel there.
+    # mirror the kernel wrapper's clamp (ops.py never tiles wider than
+    # the target's rows), or small-m/large-n problems the kernel
+    # handles fine would be priced off it
+    m_blk = min(plan.m_blk or 256, ((max(1, p.m) + 7) // 8) * 8)
+    panel_bytes = 3 * p.planes_total * p.itemsize
+    if (p.n * m_blk * p.itemsize > 8 * 2**20
+            or panel_bytes > _SMEM_PANEL_BUDGET):
+        secs *= 1e3
+    return max(secs * _interpret_factor(p), _LATENCY_FLOOR)
+
+
 # --------------------------------------------------------------------------
 # tile candidate grids
 # --------------------------------------------------------------------------
@@ -331,6 +393,15 @@ def pallas_mxu_tiles(p: Problem) -> List[Plan]:
     pairs = _clip_pairs(p, [(128, 128), (64, 64), (8, 8)], cap)
     mb = _m_blk_for(p)
     return [Plan("", n_b=a, k_b=b, m_blk=mb) for a, b in pairs]
+
+
+def rotseq_batched_tiles(p: Problem) -> List[Plan]:
+    """The fused kernel tiles only over lanes (whole n stays in VMEM)."""
+    mb = _m_blk_for(p)
+    cands = [Plan("", m_blk=mb)]
+    if mb != 128:
+        cands.append(Plan("", m_blk=128))
+    return cands
 
 
 # --------------------------------------------------------------------------
@@ -503,18 +574,39 @@ def _plan_key(problem: Problem) -> tuple:
 
     ``batch=1`` keys keep the legacy 7-tuple layout so plan caches
     persisted before the batch field existed stay valid; batched
-    problems append the batch count.
+    problems append the batch count, and problems with a static
+    live-plane count (padded/staircase sequences, which plane-skipping
+    backends price differently) append ``("live", count)`` after it.
     """
     base = (problem.m, problem.n, problem.k, problem.dtype,
             problem.platform, problem.signs, problem.sharded)
-    return base if problem.batch == 1 else base + (problem.batch,)
+    if problem.batch == 1 and problem.live_planes is None:
+        return base
+    base = base + (problem.batch,)
+    if problem.live_planes is not None:
+        base = base + ("live", problem.live_planes)
+    return base
 
 
 def _split_key(key: tuple):
-    """``key -> ((m, n, k, batch), (dtype, platform, signs, sharded))``."""
+    """``key -> ((m, n, k, batch), class, live_fraction)``.
+
+    ``class`` is the eligibility tuple ``(dtype, platform, signs,
+    sharded)``.  ``live_fraction`` decodes the optional trailing
+    ``("live", count)`` marker as ``count / ((n-1) * k)`` (``None``
+    when absent): liveness changes which backend wins — a measured
+    plane-skipping plan for a thin staircase must not transfer at
+    distance 0 to the dense grid of the same shape — so interpolation
+    treats dense and live-annotated keys as distinct classes and adds
+    the live-fraction ratio to the distance within the latter.
+    """
     m, n, k = key[:3]
     batch = key[7] if len(key) > 7 else 1
-    return (m, n, k, batch), tuple(key[3:7])
+    frac = None
+    if len(key) > 9 and key[8] == "live":
+        planes = max(1, (n - 1) * k)
+        frac = max(1, int(key[9])) / planes
+    return (m, n, k, batch), tuple(key[3:7]), frac
 
 
 def _interpolated_plan(problem: Problem, key: tuple) -> Optional[Plan]:
@@ -533,13 +625,15 @@ def _interpolated_plan(problem: Problem, key: tuple) -> Optional[Plan]:
     eligible = {spec.name for spec in eligible_backends(problem)}
     best: Optional[Plan] = None
     best_dist = _INTERP_MAX_LOGDIST
-    (m1, n1, k1, b1), cls1 = _split_key(key)
+    (m1, n1, k1, b1), cls1, frac1 = _split_key(key)
     for cached_key, plan in _PLAN_CACHE.items():
         if plan.source not in _PERSISTED_SOURCES:
             continue
-        (m2, n2, k2, b2), cls2 = _split_key(cached_key)
+        (m2, n2, k2, b2), cls2, frac2 = _split_key(cached_key)
         if cls2 != cls1:  # (dtype, platform, signs, sharded)
             continue
+        if (frac2 is None) != (frac1 is None):
+            continue  # dense vs live-annotated: different regimes
         if plan.method not in eligible:
             continue
         if min(m2, n2, k2, b2) < 1:
@@ -548,6 +642,8 @@ def _interpolated_plan(problem: Problem, key: tuple) -> Optional[Plan]:
                 + abs(math.log(n1 / n2))
                 + abs(math.log(k1 / k2))
                 + abs(math.log(b1 / b2)))
+        if frac1 is not None:
+            dist += abs(math.log(frac1 / frac2))
         if dist < best_dist:
             best, best_dist = plan, dist
     if best is None:
@@ -576,7 +672,10 @@ def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
 
     The synthetic workload matches the problem record: a per-entry sign
     array is included when ``problem.signs`` so sign-carrying plans are
-    timed on the code path they will actually serve.
+    timed on the code path they will actually serve, and a
+    ``live_planes`` bound identity-pads the trailing waves so
+    plane-skipping backends are timed on (approximately) the live grid
+    they will execute, not a dense one ~grid/live times costlier.
     """
     import jax
     import jax.numpy as jnp
@@ -588,13 +687,23 @@ def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
     # time the shape the serving path will actually run
     A = jnp.asarray(rng.standard_normal((problem.m_total, problem.n)), dt)
     th = rng.standard_normal((problem.n - 1, problem.k))
-    C = jnp.asarray(np.cos(th), dt)
-    S = jnp.asarray(np.sin(th), dt)
+    Cn, Sn = np.cos(th), np.sin(th)
+    if problem.live_planes is not None \
+            and problem.live_planes < problem.planes_total:
+        live_waves = math.ceil(problem.live_planes
+                               / max(1, problem.n - 1))
+        Cn[:, live_waves:] = 1.0
+        Sn[:, live_waves:] = 0.0
+    C = jnp.asarray(Cn, dt)
+    S = jnp.asarray(Sn, dt)
     G = None
     if problem.signs:
-        G = jnp.asarray(
-            np.where(rng.random((problem.n - 1, problem.k)) < 0.5,
-                     1.0, -1.0), dt)
+        Gn = np.where(rng.random((problem.n - 1, problem.k)) < 0.5,
+                      1.0, -1.0)
+        # identity padding must stay a rotation (a padded reflector is
+        # live), or the live_planes-shaped workload above is undone
+        Gn[(Cn == 1.0) & (Sn == 0.0)] = -1.0
+        G = jnp.asarray(Gn, dt)
     spec = get_backend(plan.method)
     fn = lambda: spec.fn(A, C, S, reflect=False, G=G, **plan.kwargs())
     jax.block_until_ready(fn())  # compile
@@ -609,6 +718,7 @@ def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
 def select_plan(m: int, n: int, k: int, *, dtype="float32",
                 platform: Optional[str] = None, signs: bool = False,
                 sharded: bool = False, batch: int = 1,
+                live_planes: Optional[int] = None,
                 autotune: bool = False, autotune_top: int = 3) -> Plan:
     """Pick ``(method, n_b, k_b, m_blk)`` for a problem, with caching.
 
@@ -622,6 +732,10 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     ``batch`` is the number of independent ``(m, n)`` targets served per
     application (see :class:`Problem`): the amortization terms differ,
     so batch 64 can legitimately pick a different backend than batch 1.
+    ``live_planes`` is the statically-known count of non-identity
+    planes (``RotationSequence.k_live``): plane-skipping backends price
+    padded/staircase grids by their live fraction, so a ``seq.T``
+    application plans differently from a dense one of the same shape.
 
     Unmeasured shapes first try **cross-shape interpolation**: the
     nearest measured/persisted plan of the same eligibility class
@@ -646,7 +760,8 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     can_measure = platform == compat.default_platform() and not sharded
     autotune = autotune and can_measure
     problem = Problem(m=m, n=n, k=k, dtype=dtype, platform=platform,
-                      signs=signs, sharded=sharded, batch=batch)
+                      signs=signs, sharded=sharded, batch=batch,
+                      live_planes=live_planes)
     key = _plan_key(problem)
     cached = _PLAN_CACHE.get(key)
     if cached is not None and (not autotune

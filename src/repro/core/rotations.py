@@ -28,11 +28,38 @@ from repro.core.sequence import RotationSequence
 
 __all__ = [
     "RotationSequence",
+    "plane_update",
     "random_sequence",
     "givens",
     "identity_sequence",
     "sequence_to_dense",
 ]
+
+
+def plane_update(x, y, c, s, g):
+    """The canonical bit-stable plane transform on one column pair.
+
+    Every rotation/reflector application path in this package — scalar
+    ``reflect`` flags, per-entry sign grids, blocked tiles, and the
+    Pallas kernels — must evaluate the 2x2 update with exactly this
+    multiply/negate order (the evaluation-order discipline of Pereira,
+    Lotfi & Langou's rounding analysis of Givens rotations)::
+
+        x' = c*x + s*y
+        y' = g * (s*x - c*y)
+
+    with ``g`` a *runtime array value* (``-1`` rotation, ``+1``
+    reflector).  The sign must never be a compile-time scalar constant:
+    XLA folds ``1.0 * t`` / ``-1.0 * t`` away and then contracts the
+    remaining expression differently from the un-folded form, which is
+    exactly the low-order-bit divergence between the scalar ``reflect``
+    path and the sign-grid path this helper exists to close.  Array
+    constants (including ``jnp.full`` under an outer ``jit``) keep the
+    multiply in the graph and are bit-identical to runtime signs.
+    """
+    xn = c * x + s * y
+    yn = g * (s * x - c * y)
+    return xn, yn
 
 
 def givens(a, b):
@@ -86,6 +113,5 @@ def sequence_to_dense(seq: RotationSequence,
             c, s, g = cos[j, p], sin[j, p], g_all[j, p]
             x = q[:, j].copy()
             y = q[:, j + 1].copy()
-            q[:, j] = c * x + s * y
-            q[:, j + 1] = g * (s * x - c * y)
+            q[:, j], q[:, j + 1] = plane_update(x, y, c, s, g)
     return q

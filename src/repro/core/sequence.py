@@ -85,23 +85,35 @@ class RotationSequence:
     (``+1``); ``reflect=True`` marks an all-reflector sequence without
     materializing the array.
 
+    ``k_live`` is an optional *static* upper bound on the number of
+    non-identity planes in the grid (``None`` = unknown, assume dense).
+    Identity-padding constructors maintain it — ``pad_to`` preserves the
+    pre-padding bound, ``seq.T`` carries the original plane count
+    through the anti-diagonal staircase, ``identity`` is 0 — so the
+    planner can route padded/staircase sequences to plane-skipping
+    backends (``rotseq_batched``) whose cost scales with live planes
+    rather than the padded grid.
+
     Registered as a JAX pytree: ``cos``/``sin``/``sign`` are children,
-    ``reflect`` is static aux data.
+    ``reflect`` and ``k_live`` are static aux data.
     """
 
     cos: Any
     sin: Any
     sign: Any = None
     reflect: bool = False
+    k_live: Optional[int] = None
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
-        return (self.cos, self.sin, self.sign), (self.reflect,)
+        return (self.cos, self.sin, self.sign), (self.reflect, self.k_live)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         cos, sin, sign = children
-        return cls(cos, sin, sign, aux[0])
+        reflect = aux[0]
+        k_live = aux[1] if len(aux) > 1 else None
+        return cls(cos, sin, sign, reflect, k_live)
 
     # -- shape / dtype -----------------------------------------------------
     @property
@@ -207,7 +219,8 @@ class RotationSequence:
     @classmethod
     def identity(cls, n: int, k: int, dtype=jnp.float32) -> "RotationSequence":
         """``k`` identity waves on ``n`` columns (exact no-op)."""
-        return cls(jnp.ones((n - 1, k), dtype), jnp.zeros((n - 1, k), dtype))
+        return cls(jnp.ones((n - 1, k), dtype), jnp.zeros((n - 1, k), dtype),
+                   k_live=0)
 
     # -- composition -------------------------------------------------------
     @property
@@ -224,32 +237,17 @@ class RotationSequence:
         (k-1-p)``, giving an ``(n-1, n+k-2)`` grid with identity
         padding off the staircase (``seq.T.T`` therefore applies the
         same transform as ``seq``, identity-padded wider).
+
+        The result carries ``k_live``: the staircase holds exactly the
+        original ``(n-1) * k`` planes (or the original bound if one was
+        already known), so plane-skipping backends apply it at the cost
+        of the *original* sequence, not the padded grid.
         """
-        cos, sin, sign = self.cos, self.sin, self.sign
-        J, k = cos.shape
-        if sign is None:
-            s_signed = sin if self.reflect else -sin
-        else:
-            s_signed = jnp.where(sign > 0, sin, -sin)
-        j = jnp.arange(J)[:, None]
-        q = jnp.arange(J + k - 1)[None, :]
-        p_idx = (J - 1 - j) + (k - 1) - q
-        valid = (p_idx >= 0) & (p_idx < k)
-        pc = jnp.clip(p_idx, 0, k - 1)
-        jb = jnp.broadcast_to(j, pc.shape)
-        c_t = jnp.where(valid, cos[jb, pc], jnp.ones((), cos.dtype))
-        s_t = jnp.where(valid, s_signed[jb, pc], jnp.zeros((), sin.dtype))
-        g_t = None
-        if sign is not None:
-            g_t = jnp.where(valid, sign[jb, pc],
-                            jnp.asarray(_ROT, sign.dtype))
-        elif self.reflect:
-            # identity padding must stay a rotation no-op (a padded
-            # reflector has det -1), so materialize the sign grid
-            g_t = jnp.where(valid, jnp.asarray(_REFL, cos.dtype),
-                            jnp.asarray(_ROT, cos.dtype))
-        return RotationSequence(c_t, s_t, g_t,
-                                False if g_t is not None else self.reflect)
+        c_t, s_t, g_t, refl_t = _transpose_waves(
+            self.cos, self.sin, self.sign, self.reflect)
+        J, k = self.cos.shape
+        live = self.k_live if self.k_live is not None else J * k
+        return RotationSequence(c_t, s_t, g_t, refl_t, k_live=live)
 
     def __matmul__(self, other: "RotationSequence") -> "RotationSequence":
         """Concatenate along ``K``: applying ``seq1 @ seq2`` equals
@@ -261,14 +259,18 @@ class RotationSequence:
                 f"cannot compose sequences on {self.n} and {other.n} columns")
         cos = jnp.concatenate([self.cos, other.cos], axis=1)
         sin = jnp.concatenate([self.sin, other.sin], axis=1)
+        live = None
+        if self.k_live is not None and other.k_live is not None:
+            live = self.k_live + other.k_live
         if (self.sign is None and other.sign is None
                 and self.reflect == other.reflect):
-            return RotationSequence(cos, sin, None, self.reflect)
+            return RotationSequence(cos, sin, None, self.reflect,
+                                    k_live=live)
         return RotationSequence(
             cos, sin,
             jnp.concatenate([self._sign_array(), other._sign_array()],
                             axis=1),
-            False)
+            False, k_live=live)
 
     def __getitem__(self, idx) -> "RotationSequence":
         """Wave slicing: ``seq[i:j]`` keeps waves ``i..j-1``."""
@@ -283,9 +285,15 @@ class RotationSequence:
     def pad_to(self, k_target: int) -> "RotationSequence":
         """Identity-pad to ``k_target`` waves (plan-cache-stable shapes).
 
-        Padding waves are exact no-op *rotations*; an all-reflector
-        sequence therefore materializes its ``sign`` array (a padded
-        reflector would not be a no-op — det is -1).
+        Padding waves are exact no-op *rotations*.  A plain (unsigned)
+        sequence stays plain — padding into a signed serve bucket must
+        not materialize a dense sign grid; the batch-stacking step
+        broadcasts an implicit-identity sign lazily when (and only
+        when) a genuinely sign-carrying batch needs one.  An
+        all-reflector sequence is the exception and materializes its
+        ``sign`` array (a padded reflector would not be a no-op — det
+        is -1).  The pre-padding live-plane bound is preserved so the
+        planner can skip the padding it just added.
         """
         pad = k_target - self.k
         if pad < 0:
@@ -293,32 +301,45 @@ class RotationSequence:
         if pad == 0:
             return self
         planes = self.cos.shape[0]
+        live = self.k_live if self.k_live is not None else planes * self.k
         cos = jnp.concatenate(
             [self.cos, jnp.ones((planes, pad), self.cos.dtype)], axis=1)
         sin = jnp.concatenate(
             [self.sin, jnp.zeros((planes, pad), self.sin.dtype)], axis=1)
         if self.sign is None and not self.reflect:
-            return RotationSequence(cos, sin, None, False)
+            return RotationSequence(cos, sin, None, False, k_live=live)
         sign = jnp.concatenate(
             [self._sign_array(),
              jnp.full((planes, pad), _ROT, self.cos.dtype)], axis=1)
-        return RotationSequence(cos, sin, sign, False)
+        return RotationSequence(cos, sin, sign, False, k_live=live)
 
     def _sign_array(self):
-        """Materialized per-entry sign array (``reflect`` folded in)."""
+        """Per-entry sign array (``reflect`` folded in), built on demand.
+
+        Implicit signs materialize *here*, not at admission: queued
+        sequences keep ``sign=None`` and only the consumer that
+        genuinely needs a grid (batch stacking of a sign-carrying
+        bucket, transposition of a reflector) pays for one — and only
+        at that moment.  (Under eager execution the broadcast still
+        commits a device buffer; the saving is that implicit sequences
+        sitting in queues or pad slots never do.)
+        """
         if self.sign is not None:
             return self.sign
-        return jnp.full(self.cos.shape, _REFL if self.reflect else _ROT,
-                        self.cos.dtype)
+        return jnp.broadcast_to(
+            jnp.asarray(_REFL if self.reflect else _ROT, self.cos.dtype),
+            self.cos.shape)
 
     def with_signs(self) -> "RotationSequence":
         """Per-entry-sign normal form: ``sign`` materialized, ``reflect``
-        folded in.  Bucketed serving uses this so every sequence in a
-        sign-carrying batch presents the same pytree structure."""
+        folded in — for callers that need every sequence in a batch to
+        present the same pytree structure.  (The serving path no longer
+        calls this at admission: plain sequences stay implicit in the
+        bucket queue and are sign-broadcast at stack time.)"""
         if self.sign is not None:
             return self
         return RotationSequence(self.cos, self.sin, self._sign_array(),
-                                False)
+                                False, k_live=self.k_live)
 
     # -- serialization -----------------------------------------------------
     def to_dict(self) -> dict:
@@ -336,6 +357,7 @@ class RotationSequence:
             else np.asarray(self.sign).tolist(),
             "reflect": bool(self.reflect),
             "dtype": str(self.dtype),
+            "k_live": self.k_live,
         }
 
     @classmethod
@@ -349,9 +371,13 @@ class RotationSequence:
         sign = d.get("sign")
         if sign is not None:
             sign = jnp.asarray(np.asarray(sign, dtype))
-        return cls.from_waves(cos, sin, sign,
-                              reflect=bool(d.get("reflect", False)),
-                              normalize=False)
+        seq = cls.from_waves(cos, sin, sign,
+                             reflect=bool(d.get("reflect", False)),
+                             normalize=False)
+        k_live = d.get("k_live")
+        if k_live is not None:
+            seq = dataclasses.replace(seq, k_live=int(k_live))
+        return seq
 
     # -- execution ---------------------------------------------------------
     def plan(self, like=None, *, m: Optional[int] = None,
@@ -400,7 +426,7 @@ class RotationSequence:
             plan = registry.select_plan(
                 m, n, k, dtype=dtype, platform=platform,
                 signs=self.sign is not None, sharded=sharded,
-                batch=batch, autotune=autotune)
+                batch=batch, live_planes=self.k_live, autotune=autotune)
             planned = plan.kwargs()
             if n_b is not None:
                 planned["n_b"] = n_b
@@ -502,10 +528,21 @@ class SequencePlan:
 
         With ``sequences`` (an iterable of ``b`` :class:`RotationSequence`
         objects of the plan's wave shape) each batch element gets its
-        own waves — the serving path's shape-bucketed execution.  The
-        backend is ``jax.vmap``-ed over ``(A, cos, sin[, sign])`` where
-        its capability allows (bit-identical to per-request application
-        for the pure-jnp backends) and looped per element otherwise.
+        own waves — the serving path's shape-bucketed execution.
+        Backends whose capability says ``batch_via="fused"`` (the
+        ``rotseq_batched`` kernel) take the whole stack in **one
+        launch**; otherwise the backend is ``jax.vmap``-ed over
+        ``(A, cos, sin[, sign])`` where its capability allows
+        (bit-identical to per-request application for the pure-jnp
+        backends) and looped per element as the last resort.
+
+        Sign structure: when the plan's sequence carries per-entry
+        signs, batch members may be plain rotation sequences — their
+        implicit-identity sign is broadcast at stack time, never
+        materialized per request (bucket admission keeps queues
+        implicit).  A signed member under an unsigned plan still
+        raises, since the planned backend was not capability-checked
+        for signs.
 
         Autodiff mirrors the single-target pair :meth:`apply` /
         :meth:`apply_direct` uniformly across every strategy:
@@ -527,8 +564,12 @@ class SequencePlan:
             raise ValueError(
                 f"plan built for n={seq.n} targets; got A.shape={A.shape}")
         run = _run_backend if direct else _apply_planned
+        run_fused = _run_backend if direct else _apply_planned_batched
         cap = registry.get_backend(self.method).capability
         if sequences is None:
+            if cap.batch_via == "fused":
+                return run_fused(self.method, self.kwargs, seq.reflect,
+                                 A, seq.cos, seq.sin, seq.sign)
             if cap.batch_via == "flatten":
                 out = run(self.method, self.kwargs, seq.reflect,
                           A.reshape(b * m, n), seq.cos, seq.sin, seq.sign)
@@ -541,6 +582,7 @@ class SequencePlan:
         if len(seqs) != b:
             raise ValueError(
                 f"{len(seqs)} sequences for a batch of {b} targets")
+        plan_signed = seq.sign is not None
         for s in seqs:
             if not isinstance(s, RotationSequence):
                 raise TypeError(f"expected RotationSequence, got {type(s)}")
@@ -548,15 +590,20 @@ class SequencePlan:
                 raise ValueError(
                     f"sequence shape {s.shape} != plan shape {seq.shape}; "
                     f"pad_to a bucket-stable wave count first")
-            if (s.sign is None) != (seq.sign is None) \
-                    or s.reflect != seq.reflect:
+            if plan_signed:
+                continue  # any structure coerces to the sign grid below
+            if s.sign is not None or s.reflect != seq.reflect:
                 raise ValueError(
-                    "mixed sign/reflect structure in one batch; normalize "
-                    "with RotationSequence.with_signs() first")
+                    "mixed sign/reflect structure in one batch; plan the "
+                    "bucket on a sign-carrying representative (or "
+                    "normalize with RotationSequence.with_signs()) first")
         C = jnp.stack([s.cos for s in seqs])
         S = jnp.stack([s.sin for s in seqs])
-        G = None if seq.sign is None \
-            else jnp.stack([s.sign for s in seqs])
+        G = None if not plan_signed \
+            else jnp.stack([s._sign_array() for s in seqs])
+        if cap.batch_via == "fused":
+            return run_fused(self.method, self.kwargs, seq.reflect,
+                             A, C, S, G)
         if cap.supports_vmap:
             in_axes = (0, 0, 0, None if G is None else 0)
             return jax.vmap(
@@ -681,6 +728,39 @@ PLAN_DICT_FORMAT = 1
 # planned application with a transposed-sequence VJP
 # --------------------------------------------------------------------------
 
+def _transpose_waves(cos, sin, sign, reflect: bool):
+    """Anti-diagonal staircase repack of one ``(n-1, k)`` wave grid.
+
+    The pure-function core of :attr:`RotationSequence.T` (vmapped by
+    the batched VJP over per-request stacks).  Returns
+    ``(c_t, s_t, g_t, reflect_t)`` where ``g_t`` is ``None`` for plain
+    rotation inputs and a materialized sign grid otherwise (identity
+    padding off the staircase must stay a rotation no-op).
+    """
+    J, k = cos.shape
+    if sign is None:
+        s_signed = sin if reflect else -sin
+    else:
+        s_signed = jnp.where(sign > 0, sin, -sin)
+    j = jnp.arange(J)[:, None]
+    q = jnp.arange(J + k - 1)[None, :]
+    p_idx = (J - 1 - j) + (k - 1) - q
+    valid = (p_idx >= 0) & (p_idx < k)
+    pc = jnp.clip(p_idx, 0, k - 1)
+    jb = jnp.broadcast_to(j, pc.shape)
+    c_t = jnp.where(valid, cos[jb, pc], jnp.ones((), cos.dtype))
+    s_t = jnp.where(valid, s_signed[jb, pc], jnp.zeros((), sin.dtype))
+    g_t = None
+    if sign is not None:
+        g_t = jnp.where(valid, sign[jb, pc], jnp.asarray(_ROT, sign.dtype))
+    elif reflect:
+        # identity padding must stay a rotation no-op (a padded
+        # reflector has det -1), so materialize the sign grid
+        g_t = jnp.where(valid, jnp.asarray(_REFL, cos.dtype),
+                        jnp.asarray(_ROT, cos.dtype))
+    return c_t, s_t, g_t, (False if g_t is not None else reflect)
+
+
 def _run_backend(method: str, kwargs: Tuple[Tuple[str, Any], ...],
                  reflect: bool, A, C, S, G):
     spec = registry.get_backend(method)
@@ -716,3 +796,50 @@ def _apply_planned_bwd(method, kwargs, reflect, residuals, dY):
 
 
 _apply_planned.defvjp(_apply_planned_fwd, _apply_planned_bwd)
+
+
+# --------------------------------------------------------------------------
+# fused batched application (batch_via="fused" backends) with the same
+# transposed-sequence VJP semantics as the per-target path
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _apply_planned_batched(method, kwargs, reflect, A, C, S, G):
+    return _run_backend(method, kwargs, reflect, A, C, S, G)
+
+
+def _apply_planned_batched_fwd(method, kwargs, reflect, A, C, S, G):
+    out = _run_backend(method, kwargs, reflect, A, C, S, G)
+    return out, (C, S, G)
+
+
+def _apply_planned_batched_bwd(method, kwargs, reflect, residuals, dY):
+    C, S, G = residuals
+    if C.ndim == 2:
+        c_t, s_t, g_t, refl_t = _transpose_waves(C, S, G, reflect)
+    elif G is None and not reflect:
+        # plain rotation stacks transpose to plain rotation staircases
+        tw = lambda c, s: _transpose_waves(c, s, None, False)[:2]
+        c_t, s_t = jax.vmap(tw)(C, S)
+        g_t, refl_t = None, False
+    else:
+        # sign-carrying (or all-reflector) stacks materialize the
+        # transposed sign grid per request; g_t presence is static in
+        # (G, reflect), so the vmap output structure is uniform
+        if G is None:
+            tw = lambda c, s: _transpose_waves(c, s, None, True)[:3]
+            c_t, s_t, g_t = jax.vmap(tw)(C, S)
+        else:
+            tw = lambda c, s, g: _transpose_waves(c, s, g, reflect)[:3]
+            c_t, s_t, g_t = jax.vmap(tw)(C, S, G)
+        refl_t = False
+    # fused backends declare supports_signs (capability-checked at
+    # registration); no blocked reroute is needed here, unlike the
+    # reflect-through-unblocked case in _apply_planned_bwd
+    dA = _run_backend(method, kwargs, refl_t, dY, c_t, s_t, g_t)
+    return (dA, jnp.zeros_like(C), jnp.zeros_like(S),
+            None if G is None else jnp.zeros_like(G))
+
+
+_apply_planned_batched.defvjp(_apply_planned_batched_fwd,
+                              _apply_planned_batched_bwd)

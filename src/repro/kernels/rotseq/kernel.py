@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.core.rotations import plane_update
 
 __all__ = ["rotseq_wave_pallas"]
 
@@ -52,9 +53,7 @@ def _wave_kernel(ct_ref, st_ref, gt_ref, init_ref, fresh_ref, out_ref,
             s = st_ref[0, jj, p].astype(x.dtype)
             g = gt_ref[0, jj, p].astype(x.dtype)
             pair = jax.lax.dynamic_slice_in_dim(x, jl, 2, axis=0)
-            xv, yv = pair[0], pair[1]
-            xn = c * xv + s * yv
-            yn = g * (s * xv - c * yv)
+            xn, yn = plane_update(pair[0], pair[1], c, s, g)
             return jax.lax.dynamic_update_slice_in_dim(
                 x, jnp.stack([xn, yn], axis=0), jl, axis=0
             )

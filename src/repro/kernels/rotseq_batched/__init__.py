@@ -1,0 +1,3 @@
+from repro.kernels.rotseq_batched.ops import rot_sequence_batched
+
+__all__ = ["rot_sequence_batched"]

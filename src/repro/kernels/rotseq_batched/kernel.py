@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: fused multi-request rotation-sequence application.
+
+One launch serves a whole ``RotationService`` bucket: the grid runs over
+``(batch, m-blocks)`` and each step rotates one ``(n, m_blk)`` slab of
+one request entirely in VMEM — the packed C/S/G panel is loaded once per
+batch element (reused across its m-blocks) instead of once per request
+launch, and the target streams through HBM exactly once regardless of
+the wave count.  This is the paper's communication argument applied
+across *requests*: the bucket's batched memory pass replaces ``b``
+vmap'd/looped per-request launches.
+
+Identity padding is *skipped*, not multiplied through.  Buckets
+normalize wave counts with ``pad_to`` (whole trailing waves of
+``c=1, s=0`` no-ops) and ``seq.T`` packs a ``k``-wave sequence into an
+``n+k-2``-wave anti-diagonal staircase that is mostly identity; both
+paddings leave each wave's *live* planes in one contiguous window.  The
+host computes a per-wave ``(start, count)`` window (``valid_planes``)
+and the kernel loops over ``count`` planes only — ``count = 0`` waves
+cost nothing.  A per-grid-step plane counter is emitted so tests can
+assert the skip actually happened.
+
+Layout matches the VPU wavefront kernel ("packing", paper SS4): targets
+are transposed to ``(n, m)`` so matrix columns are sublane rows and the
+row dimension ``m`` lies along TPU lanes; every plane update is a dense
+``(1, m_blk)`` x scalar VPU op through the canonical
+:func:`~repro.core.rotations.plane_update` evaluation order (bit-stable
+against every jnp backend).
+
+Residency: the whole ``(n, m_blk)`` slab stays in VMEM for all ``K``
+waves, and the scalar-indexed C/S/G panels stay in SMEM — the cost
+model (``registry.cost_rotseq_batched``) prices the kernel out of
+``method="auto"`` when either exceeds its on-chip budget
+(``_SMEM_PANEL_BUDGET`` for the panels), since interpret mode would
+happily run grids Mosaic could never compile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.core.rotations import plane_update
+
+__all__ = ["rotseq_batched_pallas"]
+
+
+def _batched_kernel(starts_ref, counts_ref, c_ref, s_ref, g_ref, a_ref,
+                    out_ref, planes_ref, *, K: int):
+    """Apply all K waves to one (n, m_blk) slab, skipping dead planes."""
+    x0 = a_ref[0]  # (n, m_blk)
+
+    def wave(p, carry):
+        x, total = carry
+        start = starts_ref[0, p]
+        count = counts_ref[0, p]
+
+        def rot(jj, x):
+            j = start + jj
+            c = c_ref[0, j, p].astype(x.dtype)
+            s = s_ref[0, j, p].astype(x.dtype)
+            g = g_ref[0, j, p].astype(x.dtype)
+            pair = jax.lax.dynamic_slice_in_dim(x, j, 2, axis=0)
+            xn, yn = plane_update(pair[0], pair[1], c, s, g)
+            return jax.lax.dynamic_update_slice_in_dim(
+                x, jnp.stack([xn, yn], axis=0), j, axis=0
+            )
+
+        x = jax.lax.fori_loop(0, count, rot, x)
+        return x, total + count
+
+    x, total = jax.lax.fori_loop(0, K, wave, (x0, jnp.int32(0)))
+    out_ref[0] = x
+    planes_ref[0, 0] = total
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m_blk", "interpret")
+)
+def rotseq_batched_pallas(AT, C, S, G, starts, counts, *, m_blk: int,
+                          interpret: bool = True):
+    """One fused launch over a batch of packed targets.
+
+    Args:
+      AT: ``(b, n, m_pad)`` packed (transposed) targets, ``m_pad`` a
+        multiple of ``m_blk``.
+      C, S, G: ``(bs, n-1, K)`` wave stacks — ``bs = b`` for per-request
+        sequences or ``bs = 1`` for one shared sequence.  ``G`` is the
+        per-entry sign of the unified update (``-1`` rotation, ``+1``
+        reflector), always materialized.
+      starts, counts: ``(bs, K)`` int32 — first live plane and number of
+        contiguous live planes per wave; ``count = 0`` skips the wave.
+      m_blk: lanes of the target per grid step.
+
+    Returns:
+      ``(out, planes)``: the rotated ``(b, n, m_pad)`` stack and an
+      ``(b, R)`` int32 count of planes actually processed per grid step
+      (the plane-skip witness; ``R = m_pad // m_blk``).
+    """
+    b, n, m_pad = AT.shape
+    bs, J, K = C.shape
+    assert J == n - 1, (C.shape, AT.shape)
+    assert bs in (1, b), (bs, b)
+    assert m_pad % m_blk == 0, (m_pad, m_blk)
+    R = m_pad // m_blk
+    grid = (b, R)
+
+    if bs == 1:
+        panel_ix = lambda ib, i: (0, 0, 0)
+        window_ix = lambda ib, i: (0, 0)
+    else:
+        panel_ix = lambda ib, i: (ib, 0, 0)
+        window_ix = lambda ib, i: (ib, 0)
+
+    panel_spec = pl.BlockSpec((1, J, K), panel_ix,
+                              memory_space=pltpu.SMEM)
+    window_spec = pl.BlockSpec((1, K), window_ix,
+                               memory_space=pltpu.SMEM)
+    kernel = functools.partial(_batched_kernel, K=K)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            window_spec,
+            window_spec,
+            panel_spec,
+            panel_spec,
+            panel_spec,
+            pl.BlockSpec((1, n, m_blk), lambda ib, i: (ib, 0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n, m_blk), lambda ib, i: (ib, 0, i)),
+            pl.BlockSpec((1, 1), lambda ib, i: (ib, i),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n, m_pad), AT.dtype),
+            jax.ShapeDtypeStruct((b, R), jnp.int32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(starts, counts, C, S, G, AT)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused multi-request kernel.
+
+Per-request application through the (numpy-validated) blocked host
+algorithm — what a ``RotationService`` bucket would do without the
+fused launch.  The fused kernel must match it bit-for-bit on the
+rotation and per-entry-sign families.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.blocked import rot_sequence_blocked
+
+
+def rot_sequence_batched_ref(A, C, S, *, reflect: bool = False, G=None,
+                             n_b: int = 64, k_b: int = 16):
+    """b separate blocked applications (shared or per-request waves)."""
+    single = A.ndim == 2
+    if single:
+        A = A[None]
+    outs = []
+    for i in range(A.shape[0]):
+        Ci = C if C.ndim == 2 else C[i]
+        Si = S if S.ndim == 2 else S[i]
+        Gi = None if G is None else (G if G.ndim == 2 else G[i])
+        outs.append(rot_sequence_blocked(A[i], Ci, Si, n_b=n_b, k_b=k_b,
+                                         reflect=reflect, G=Gi))
+    out = jnp.stack(outs)
+    return out[0] if single else out

@@ -27,7 +27,18 @@ you approach the machine's bandwidth lower bound.
 * **slot padding + per-request unpadding** — partial drains are padded
   to the bucket's ``slots`` with identity requests (zero targets,
   identity waves) so the jitted batched computation sees one stable
-  shape; results are sliced back out per ticket.
+  shape; results are sliced back out per ticket.  Queued sequences keep
+  their sign structure *implicit* (no dense grid per request or pad
+  slot); stacking broadcasts identity signs only for genuinely
+  sign-carrying batches.
+* **fused bucket execution** — when the bucket plan lands on a
+  ``batch_via="fused"`` backend (the ``rotseq_batched`` kernel —
+  ``method="auto"`` picks it on TPU, or pass
+  ``method="rotseq_batched"``), the whole drain executes in **one**
+  Pallas launch gridded over ``(batch, m-blocks)``, with per-wave
+  ``valid_planes`` windows skipping the ``pad_to`` identity waves
+  instead of multiplying them through; per-request vmap/loop execution
+  stays as the fallback capability on every other backend.
 * **serialized warm starts** — resolved bucket plans write through to a
   JSON store next to the registry's persisted plan cache
   (``~/.cache/repro/serve_plans.json``; same ``REPRO_PLAN_CACHE``
@@ -35,14 +46,21 @@ you approach the machine's bandwidth lower bound.
   them via :meth:`~repro.core.sequence.SequencePlan.from_dict` and
   performs **zero** new registry resolutions for known buckets.
 
-Bitwise contract: the pure-jnp rotation family (``unoptimized`` /
-``wavefront`` / ``blocked``) is bit-identical between per-request and
-bucketed execution for plain-rotation and per-entry-sign sequences
-(identity padding, slot padding, and vmap are all exact).  Two paths
-agree to dtype accuracy rather than bitwise: the ``accumulated``/MXU
-family (reassociates into GEMMs), and all-reflector sequences (the
-bucket normalizes ``reflect=True`` to a sign grid, whose XLA fusion
-differs in low-order bits from the scalar ``reflect`` path).
+Bitwise contract: per-request and bucketed execution are bit-identical
+for plain-rotation sequences on every rotation-family backend
+(``unoptimized`` / ``wavefront`` / ``blocked`` / ``rotseq_batched``),
+for per-entry-sign sequences on the sign-capable family (``blocked``
+and the fused kernel — the backends signed dispatch can reach), and —
+new with the bit-stable reflector normalization — for **all-reflector**
+sequences across the two: every path evaluates the canonical
+``core.rotations.plane_update`` order with runtime sign arrays, so the
+sign-grid normalization a signed bucket performs matches the scalar
+``reflect`` path a lone request takes, to the last bit.  Only the
+``accumulated``/MXU family (which reassociates rotations into GEMMs)
+agrees to dtype accuracy rather than bitwise.  The contract assumes
+finite targets without ``-0.0`` entries: the fused kernel's
+identity-plane skipping leaves NaN/inf/-0.0 values untouched where a
+multiplied-through ``0*x`` would poison or sign-normalize them.
 """
 from __future__ import annotations
 
@@ -201,13 +219,18 @@ class RotationService:
                          wave_dtype=str(seq.dtype))
 
     def _normalize(self, seq, key: BucketKey):
-        """pad_to the bucket wave count; signed buckets materialize the
-        per-entry sign grid so every sequence shares one structure."""
+        """pad_to the bucket wave count; sign structure stays implicit.
+
+        Queued sequences keep their own sign representation — a plain
+        (unsigned) sequence padded into a signed bucket is *not*
+        materialized into a dense sign grid at admission
+        (``pad_to`` keeps identity padding implicit; only genuine
+        reflector sequences carry grids).  Batch stacking broadcasts
+        implicit-identity signs lazily at drain time.
+        """
         if seq.k < key.k_pad:
             self.stats["padded_waves"] += key.k_pad - seq.k
             seq = seq.pad_to(key.k_pad)
-        if key.signed:
-            seq = seq.with_signs()
         return seq
 
     def submit(self, seq, A) -> int:
@@ -291,16 +314,20 @@ class RotationService:
         targets = [p.A for p in batch]
         pad = self.slots - len(batch)
         if pad:  # identity requests keep the jitted shape slot-stable
+            # (implicit-identity signs even in signed buckets: the
+            # stack step broadcasts them, no dense grid per pad slot)
             self.stats["padded_slots"] += pad
             ident = RotationSequence.identity(key.n, key.k_pad,
                                               dtype=seqs[0].dtype)
-            if key.signed:
-                ident = ident.with_signs()
             zero = jnp.zeros((key.m, key.n), targets[0].dtype)
             seqs = seqs + [ident] * pad
             targets = targets + [zero] * pad
         A = jnp.stack(targets)
-        plan = self._bucket_plan(key, seqs[0], A)
+        # the planning representative carries the bucket's signature: a
+        # signed bucket plans (and warm-binds) on a sign-carrying
+        # sequence even when the first queued request is implicit
+        rep = seqs[0].with_signs() if key.signed else seqs[0]
+        plan = self._bucket_plan(key, rep, A)
         out = plan.apply_batched(A, sequences=seqs)
         self.stats["batches"] += 1
         for i, p in enumerate(batch):  # per-request unpadding

@@ -15,7 +15,7 @@ from repro.configs import ARCHS, get_config
 from repro.configs.rotseq_paper import CONFIG as ROTSEQ_CFG
 
 EXPECTED = {"unoptimized", "wavefront", "blocked", "accumulated",
-            "pallas_wave", "pallas_mxu"}
+            "pallas_wave", "pallas_mxu", "rotseq_batched"}
 
 # shared case grid for oracle agreement
 CASES = [(5, 8, 3), (12, 17, 6), (9, 33, 4)]

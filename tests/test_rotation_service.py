@@ -202,15 +202,15 @@ def test_service_partial_batch_pads_slots():
 
 def test_service_signed_and_reflect_requests():
     """Sign-carrying and reflector sequences bucket separately from plain
-    rotations; signed requests stay bit-identical to per-request
-    application.  All-reflector requests are normalized to the per-entry
-    sign grid, whose XLA fusion differs in low-order bits from the
-    scalar ``reflect=True`` path a lone request takes — those agree to
-    dtype accuracy instead."""
+    rotations; every request — including all-reflector ones — stays
+    **bit-identical** to per-request application: the bit-stable
+    reflector normalization makes the bucket's sign-grid execution equal
+    the scalar ``reflect=True`` path a lone request takes, to the last
+    bit."""
     clear_plan_cache()
     rng = np.random.default_rng(7)
     m, n, k = 16, 24, 8
-    requests, reflect_rows = [], set()
+    requests = []
     for i in range(9):
         A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
         seq = random_sequence(jax.random.key(i), n, k)
@@ -221,20 +221,63 @@ def test_service_signed_and_reflect_requests():
             seq = RotationSequence(seq.cos, seq.sin, sign)
         elif i % 3 == 2:
             seq = RotationSequence(seq.cos, seq.sin, None, True)
-            reflect_rows.add(i)
         requests.append((seq, A))
     refs = [seq.plan(like=A).apply(A) for seq, A in requests]
     svc = RotationService(slots=4, store=False)
     outs = svc.apply_many(requests)
-    # plain bucket + signed bucket (sign-carrying and reflect normalize
-    # to the same per-entry-sign structure)
+    # plain bucket + signed bucket (sign-carrying and reflect share the
+    # signed bucket; their structures stay implicit until stacking)
     assert svc.stats["plans_resolved"] == 2
-    for i, (out, ref) in enumerate(zip(outs, refs)):
-        if i in reflect_rows:
-            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                                       atol=5e-6, rtol=1e-4)
-        else:
-            np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    clear_plan_cache()
+
+
+def test_service_admission_keeps_signs_implicit():
+    """Regression (pad_to/admission memory): padding a plain or
+    reflector sequence into a bucket must not materialize dense sign
+    grids per queued request — plain stays ``sign=None`` after
+    ``pad_to``, reflector requests only materialize at genuine-reflector
+    padding, and identity slot-pads stay implicit."""
+    clear_plan_cache()
+    svc = RotationService(slots=8, store=False)
+    rng = np.random.default_rng(9)
+    A = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    plain = random_sequence(jax.random.key(0), 16, 5)
+    svc.submit(plain, A)
+    refl = RotationSequence(plain.cos, plain.sin, None, True)
+    svc.submit(refl, A)
+    queued = [p.seq for q in svc._queues.values() for p in q]
+    plain_q = [s for s in queued if not s.reflect and s.sign is None]
+    assert plain_q, "plain request must stay implicit (sign=None)"
+    # pad_to on a plain sequence keeps the sign implicit and records
+    # the live-plane bound the planner skips padding with
+    padded = plain.pad_to(8)
+    assert padded.sign is None and padded.k_live == 15 * 5
+    # the on-demand sign grid is correct when a consumer does need it
+    # (the sequence itself stays implicit)
+    bcast = padded._sign_array()
+    assert bcast.shape == padded.cos.shape
+    assert bool((np.asarray(bcast) == -1.0).all())
+    assert padded.sign is None
+    # genuine reflector padding still materializes (padded reflectors
+    # are not no-ops)
+    assert refl.pad_to(8).sign is not None
+    clear_plan_cache()
+
+
+def test_service_fused_bucket_execution_bitwise():
+    """Bucket drains through the fused one-launch backend must equal
+    per-request auto dispatch bit-for-bit (rotation + signed families,
+    partial buckets included)."""
+    clear_plan_cache()
+    requests = _stream(10)  # 3 buckets, partial drains
+    refs = [seq.plan(like=A).apply(A) for seq, A in requests]
+    svc = RotationService(slots=4, store=False, method="rotseq_batched")
+    outs = svc.apply_many(requests)
+    assert svc.stats["padded_slots"] > 0  # partial buckets exercised
+    for out, ref in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     clear_plan_cache()
 
 
@@ -449,3 +492,44 @@ def test_compare_baseline_check_semantics():
     assert cb._check("o", rate_lo, 100.0, 129.0)[0]
     assert cb._check("o", rate_lo, 100.0, 400.0)[0]  # under abs floor
     assert not cb._check("o", rate_lo, 100.0, 600.0)[0]
+
+
+def test_compare_baseline_liveness_floor():
+    """Warn-only serving rates absorb noise but hard-fail when the rate
+    collapses below the absolute liveness floor (hung-kernel detector),
+    and the fused-vs-vmap speedup row gates at the 1.5x acceptance."""
+    import importlib.util
+    import pathlib
+
+    spec = importlib.util.spec_from_file_location(
+        "compare_baseline",
+        pathlib.Path(__file__).parent.parent / "benchmarks"
+        / "compare_baseline.py")
+    cb = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cb)
+
+    warn = dict(higher_is_better=True, rel_tol=0.30, warn_only=True,
+                live_floor=1.0)
+    ok, msg = cb._evaluate("w", warn, 100.0, 50.0)   # noisy but alive
+    assert ok and "warn-only" in msg
+    ok, msg = cb._evaluate("w", warn, 100.0, 0.0)    # collapsed
+    assert not ok and "liveness" in msg
+    ok, msg = cb._evaluate("w", warn, 100.0, float("nan"))
+    assert not ok and "liveness" in msg
+    assert cb._evaluate("w", warn, 100.0, 120.0)[0]  # healthy
+    # the floor is unconditional: even against a baseline that itself
+    # drifted near the floor (relative band satisfied), a collapsed
+    # rate fails
+    ok, msg = cb._evaluate("w", warn, 1.2, 0.95)
+    assert not ok and "liveness" in msg
+
+    # the SPEC rows the satellite is about actually carry the floor
+    assert cb.SPEC["serve/bucketed:req_s"]["live_floor"] > 0
+    assert cb.SPEC["serve/shared_batch:speedup"]["live_floor"] > 0
+    fused = cb.SPEC["serve/fused_vs_vmap:speedup"]
+    assert not fused.get("warn_only")          # gating, not warn-only
+    assert fused["abs_floor"] == 1.5           # the acceptance bar
+    # >=1.5x passes even against a drifted-high baseline; below both
+    # the band and the floor fails
+    assert cb._evaluate("f", fused, 8.0, 1.6)[0]
+    assert not cb._evaluate("f", fused, 8.0, 1.2)[0]
