@@ -1,20 +1,33 @@
-# Tier-1 verification + the compat-shim grep gate.
+# Tier-1 verification + static invariant analysis.
 #
-# `make check` is the CI entry point: it enforces the repo rule that no
-# version-sensitive JAX attribute lookup (jax.shard_map / jax.typeof /
-# jax.lax.pcast / jax.lax.pvary / pltpu.[TPU]CompilerParams) appears
-# outside src/repro/compat.py (the recursive grep covers every package,
-# src/repro/eig/ included), that the eig subsystem routes all rotation
-# application through the dispatch registry (eig-gate), that internal
-# code speaks RotationSequence rather than raw (A, C, S) arrays
-# (seq-gate), that the serving path applies rotations only through
-# SequencePlan/RotationSequence (serve-gate), then runs the full test
-# suite.
+# `make check` is the CI entry point: `make lint` runs the AST-based
+# invariant analyzer (src/repro/analysis — rule families RA1 compat
+# isolation, RA2 dispatch layering, RA3 bitwise contract, RA4 kernel
+# hygiene, RA5 plan-cache determinism) plus ruff when available, then
+# the full test suite runs.  The analyzer replaced the four grep gates
+# (compat/eig/seq/serve): it resolves import aliases, walks pallas_call
+# kernel bodies, and suppresses via `# repro-lint: disable=RAx` — see
+# `python -m repro.analysis --list-rules`.  The old gate targets remain
+# below as thin aliases for one release.
 
-.PHONY: check test compat-gate eig-gate seq-gate serve-gate smoke bench \
-	bench-artifacts bench-compare
+.PHONY: check lint analyze ruff test compat-gate eig-gate seq-gate \
+	serve-gate smoke bench bench-artifacts bench-compare
 
-check: compat-gate eig-gate seq-gate serve-gate test
+check: lint test
+
+lint: analyze ruff
+
+# Mtime-cached AST walk (REPRO_LINT_CACHE=off disables); exits 1 on any
+# non-baselined violation.
+analyze:
+	PYTHONPATH=src python -m repro.analysis
+
+# ruff is optional locally (CI installs it via requirements-dev.txt);
+# config in ruff.toml.
+ruff:
+	@command -v ruff >/dev/null 2>&1 \
+		&& ruff check . \
+		|| echo 'ruff not installed; skipping (CI runs it)'
 
 # pytest.ini promotes the library's own DeprecationWarnings to errors
 # when they originate *from repro internals* (module regex; a -W flag
@@ -30,44 +43,21 @@ PYTEST_PAR := $(shell python -c 'import xdist' 2>/dev/null && echo '-n auto')
 test:
 	PYTHONPATH=src python -m pytest -q --maxfail=1 $(PYTEST_PAR)
 
+# ---------------------------------------------------------------------------
+# Deprecated gate aliases (one release): each now runs the analyzer
+# rule family that subsumes it.  The AST rules are strictly stronger —
+# e.g. seq-gate's regex missed `from repro.core.api import
+# apply_rotation_sequence as _ars` (see
+# tests/analysis_fixtures/ra201_aliased_import.py); RA201 does not.
+# ---------------------------------------------------------------------------
+
 compat-gate:
-	@! grep -rnE 'jax\.shard_map|jax\.typeof|jax\.lax\.p(cast|vary)\b|pltpu\.(TPU)?CompilerParams' \
-		--include='*.py' src benchmarks examples tests \
-		| grep -v 'src/repro/compat\.py' \
-		|| { echo 'compat-gate FAILED: version-sensitive JAX attrs outside src/repro/compat.py (see matches above)'; exit 1; }
-	@echo 'compat-gate OK'
+	@echo 'compat-gate is deprecated: running analyzer family RA1'
+	PYTHONPATH=src python -m repro.analysis --rules RA1
 
-# src/repro/eig must dispatch every application through the registry API
-# (apply_rotation_sequence / DelayedRotationBuffer) — never a backend or
-# kernel module directly, or the cost model + plan cache are bypassed.
-eig-gate:
-	@! grep -rnE 'repro\.kernels|core\.(blocked|accumulate|ref)\b|rot_sequence_(blocked|accumulated|unoptimized|wavefront|wave|mxu|batched)' \
-		--include='*.py' src/repro/eig \
-		|| { echo 'eig-gate FAILED: src/repro/eig must go through the dispatch registry (see matches above)'; exit 1; }
-	@echo 'eig-gate OK'
-
-# Internal code must construct RotationSequence objects and go through
-# seq.plan / SequencePlan.apply; the raw-array entry point
-# apply_rotation_sequence(...) is the *external* compatibility wrapper
-# and may only be called from core/api.py itself.
-seq-gate:
-	@! grep -rnE 'apply_rotation_sequence\s*\(' \
-		--include='*.py' src/repro \
-		| grep -v 'src/repro/core/api\.py' \
-		|| { echo 'seq-gate FAILED: internal raw (A, C, S) application outside core/api.py — construct a RotationSequence and use seq.plan(...).apply (see matches above)'; exit 1; }
-	@echo 'seq-gate OK'
-
-# The serving path (RotationService + launch/serve.py) must apply
-# rotations only through SequencePlan / RotationSequence (which route
-# bucket drains to the fused rotseq_batched backend or the per-request
-# vmap/loop fallback) — never the raw-array compat wrapper, a backend
-# module, or a kernel (the fused one included) directly — or bucket
-# plans stop being the single dispatch point.
-serve-gate:
-	@! grep -rnE 'apply_rotation_sequence\s*\(|repro\.kernels|core\.(blocked|accumulate|ref)\b|rot_sequence_(blocked|accumulated|unoptimized|wavefront|wave|mxu|batched)|rotseq_batched_pallas' \
-		--include='*.py' src/repro/serve src/repro/launch/serve.py \
-		|| { echo 'serve-gate FAILED: the serving path must apply rotations through SequencePlan/RotationSequence only, fused or vmap (see matches above)'; exit 1; }
-	@echo 'serve-gate OK'
+eig-gate seq-gate serve-gate:
+	@echo '$@ is deprecated: running analyzer family RA2'
+	PYTHONPATH=src python -m repro.analysis --rules RA2
 
 smoke:
 	PYTHONPATH=src:. python benchmarks/run.py --only smoke

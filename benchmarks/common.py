@@ -39,10 +39,12 @@ def write_json(path: str, meta: dict | None = None) -> str:
 
     import jax as _jax
 
+    from repro.compat import default_platform
+
     payload = {
         "format": 1,
         "meta": dict(meta or {}, jax=_jax.__version__,
-                     backend=_jax.default_backend(),
+                     backend=default_platform(),
                      python=_platform.python_version()),
         "rows": collected_results(),
     }

@@ -1,0 +1,17 @@
+"""AST-based static invariant analyzer for the repro codebase.
+
+Run it as ``python -m repro.analysis`` (or ``make lint``).  See
+:mod:`repro.analysis.rules` for the rule families and
+:mod:`repro.analysis.engine` for the machinery (alias-resolving import
+tables, suppression pragmas, baseline, mtime cache).
+"""
+from .engine import (ModuleInfo, Rule, Violation, analyze_file,
+                     analyze_paths, baseline_key, load_baseline,
+                     write_baseline)
+from .rules import ALL_RULES, all_rules, rules_matching
+
+__all__ = [
+    "ModuleInfo", "Rule", "Violation", "analyze_file", "analyze_paths",
+    "baseline_key", "load_baseline", "write_baseline",
+    "ALL_RULES", "all_rules", "rules_matching",
+]

@@ -25,6 +25,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.rotations import plane_update
+
 __all__ = ["JacobiResult", "jacobi_eigh", "jacobi_apply_basis"]
 
 
@@ -118,8 +120,7 @@ def jacobi_eigh(H0, *, cycles: int = 8) -> JacobiResult:
         def col_pass(M):
             x = M[:, pj]
             y = M[:, pj + 1]
-            xn = cc * x + ss * y
-            yn = gg * (ss * x - cc * y)
+            xn, yn = plane_update(x, y, cc, ss, gg)
             M = M.at[:, pj].set(xn)
             return M.at[:, pj + 1].set(yn)
 

@@ -50,6 +50,8 @@ __all__ = [
 # hardware table lives in the jax-free repro.hw (shared with the
 # roofline report); re-exported here for registry users
 from repro.hw import Hardware, PLATFORMS  # noqa: E402
+from repro.kernels.limits import (SMEM_PANEL_BUDGET, VMEM_SLAB_BUDGET,
+                                  clamp_m_blk)
 
 # Pallas interpret mode executes the kernel body op-by-op on the host —
 # orders of magnitude off compiled speed.  Off-TPU the pallas backends
@@ -301,13 +303,6 @@ def cost_pallas_mxu(p: Problem, plan: Plan) -> float:
                _LATENCY_FLOOR)
 
 
-# SMEM bytes the fused kernel may spend on one request's C/S/G panels
-# (scalar memory is orders of magnitude smaller than VMEM; serve-bucket
-# grids are a few KB, a (255, 263) staircase panel set is ~800KB and
-# would fail Mosaic compilation)
-_SMEM_PANEL_BUDGET = 128 * 2**10
-
-
 def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
     """Fused multi-request kernel (SS6 applied across requests).
 
@@ -329,14 +324,14 @@ def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
     # assumption to hold, and the scalar-indexed C/S/G panels live in
     # SMEM, whose capacity is far smaller — a (n-1, K) grid past the
     # budget cannot compile on hardware (interpret mode hides this),
-    # so keep auto off the kernel there.
-    # mirror the kernel wrapper's clamp (ops.py never tiles wider than
-    # the target's rows), or small-m/large-n problems the kernel
-    # handles fine would be priced off it
-    m_blk = min(plan.m_blk or 256, ((max(1, p.m) + 7) // 8) * 8)
+    # so keep auto off the kernel there.  Budgets and the m_blk clamp
+    # come from repro.kernels.limits — the same definitions the kernel
+    # wrapper uses, so the kernel the model prices is the kernel that
+    # launches (enforced by RA403/RA404).
+    m_blk = clamp_m_blk(p.m, plan.m_blk or 256)
     panel_bytes = 3 * p.planes_total * p.itemsize
-    if (p.n * m_blk * p.itemsize > 8 * 2**20
-            or panel_bytes > _SMEM_PANEL_BUDGET):
+    if (p.n * m_blk * p.itemsize > VMEM_SLAB_BUDGET
+            or panel_bytes > SMEM_PANEL_BUDGET):
         secs *= 1e3
     return max(secs * _interpret_factor(p), _LATENCY_FLOOR)
 

@@ -32,6 +32,8 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from repro.core.rotations import plane_update
+
 from .qr_shift import wilkinson_shift
 from .tridiag import host_givens
 
@@ -70,10 +72,10 @@ def bidiagonalize(A) -> BidiagResult:
         for i in range(m - 2, t - 1, -1):
             c, s = host_givens(A[i, t], A[i + 1, t])
             if s != 0.0:
-                ri = A[i, t:].copy()
-                ri1 = A[i + 1, t:]
-                A[i, t:] = c * ri + s * ri1
-                A[i + 1, t:] = -s * ri + c * ri1
+                # g=-1.0 yields -s*x + c*y bit-identically (negation is
+                # exact); the canonical stencil stays single-sourced.
+                A[i, t:], A[i + 1, t:] = plane_update(
+                    A[i, t:], A[i + 1, t:], c, s, -1.0)
             CL[i, (m - 2 - i) + 2 * t] = c
             SL[i, (m - 2 - i) + 2 * t] = s
         # columns: zero A[t, t+2:] right-to-left, planes (j, j+1),
@@ -81,10 +83,8 @@ def bidiagonalize(A) -> BidiagResult:
         for j in range(n - 2, t, -1):
             c, s = host_givens(A[t, j], A[t, j + 1])
             if s != 0.0:
-                cj = A[t:, j].copy()
-                cj1 = A[t:, j + 1]
-                A[t:, j] = c * cj + s * cj1
-                A[t:, j + 1] = -s * cj + c * cj1
+                A[t:, j], A[t:, j + 1] = plane_update(
+                    A[t:, j], A[t:, j + 1], c, s, -1.0)
             CR[j, (n - 2 - j) + 2 * t] = c
             SR[j, (n - 2 - j) + 2 * t] = s
     d = np.diagonal(A).copy()
@@ -186,9 +186,7 @@ def bidiag_qr(d, f, *, tol: Optional[float] = None,
             sr[j] = s
             if j > lo:
                 f[j - 1] = c * f[j - 1] + s * z  # z = right bulge
-            dj, fj = d[j], f[j]
-            d[j] = c * dj + s * fj
-            f[j] = -s * dj + c * fj
+            d[j], f[j] = plane_update(d[j], f[j], c, s, -1.0)
             bulge = s * d[j + 1]
             d[j + 1] = c * d[j + 1]
             # left rotation: rows (j, j+1), zero the (j+1, j) bulge
@@ -196,9 +194,7 @@ def bidiag_qr(d, f, *, tol: Optional[float] = None,
             cl[j] = c
             sl[j] = s
             d[j] = c * d[j] + s * bulge
-            fj, dj1 = f[j], d[j + 1]
-            f[j] = c * fj + s * dj1
-            d[j + 1] = -s * fj + c * dj1
+            f[j], d[j + 1] = plane_update(f[j], d[j + 1], c, s, -1.0)
             if j < hi - 1:
                 bulge2 = s * f[j + 1]
                 f[j + 1] = c * f[j + 1]

@@ -39,7 +39,7 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro.core.rotations import RotationSequence
+from repro.core.rotations import RotationSequence, plane_update
 
 __all__ = ["TridiagResult", "tridiagonalize", "tridiag_wave_count",
            "host_givens"]
@@ -99,15 +99,13 @@ def tridiagonalize(H) -> TridiagResult:
             c, s = host_givens(H[j, t], H[j + 1, t])
             if s != 0.0:
                 # columns < t of rows/cols >= t+1 are already zero, so
-                # the update only needs the trailing t: slice
-                rj = H[j, t:].copy()
-                rj1 = H[j + 1, t:]
-                H[j, t:] = c * rj + s * rj1
-                H[j + 1, t:] = -s * rj + c * rj1
-                cj = H[t:, j].copy()
-                cj1 = H[t:, j + 1]
-                H[t:, j] = c * cj + s * cj1
-                H[t:, j + 1] = -s * cj + c * cj1
+                # the update only needs the trailing t: slice.  g=-1.0
+                # gives the rotation form -s*x + c*y bit-identically
+                # (negation is exact), keeping the canonical stencil.
+                H[j, t:], H[j + 1, t:] = plane_update(
+                    H[j, t:], H[j + 1, t:], c, s, -1.0)
+                H[t:, j], H[t:, j + 1] = plane_update(
+                    H[t:, j], H[t:, j + 1], c, s, -1.0)
             p = (n - 2 - j) + 2 * t
             C[j, p] = c
             S[j, p] = s

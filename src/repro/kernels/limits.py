@@ -1,0 +1,57 @@
+"""Single source of truth for on-chip kernel budgets and tile clamps.
+
+Every constant that prices a Pallas kernel's on-chip residency — and
+every helper that derives a block shape from one — lives here and
+nowhere else.  PR 5 shipped with the fused kernel's ``m_blk`` clamp
+duplicated between ``rotseq_batched/ops.py`` and the registry cost
+guard, coupled only by a comment ("mirror the kernel wrapper's clamp");
+the analyzer rule RA403/RA404 (``repro.analysis``) now *enforces* that
+budget constants and clamp helpers are defined in this module and
+imported everywhere else, so the cost model can never silently price a
+kernel off a stale copy of its own limits.
+
+No jax imports: this module is pure host arithmetic, importable from
+the registry (which must stay cheap to import) and from every kernel
+wrapper without ordering constraints.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "SUBLANES", "SMEM_PANEL_BUDGET", "VMEM_SLAB_BUDGET",
+    "round_up", "clamp_m_blk",
+]
+
+# TPU sublane count: block shapes keep the second-minor dimension a
+# multiple of this so Mosaic never pads a tile internally.
+SUBLANES = 8
+
+# SMEM bytes one request's scalar-indexed C/S/G panels may occupy in the
+# fused rotseq_batched kernel.  Scalar memory is orders of magnitude
+# smaller than VMEM: serve-bucket grids are a few KB, while a (255, 263)
+# staircase panel set is ~800KB and would fail Mosaic compilation —
+# interpret mode would happily run it, which is why the cost model
+# prices the kernel out (rather than crashing) past this budget.
+SMEM_PANEL_BUDGET = 128 * 2**10
+
+# VMEM bytes one (n, m_blk) target slab may occupy: the fused kernel's
+# single-HBM-pass argument assumes the whole slab stays resident for all
+# K waves.
+VMEM_SLAB_BUDGET = 8 * 2**20
+
+
+def round_up(x: int, mult: int) -> int:
+    """``x`` rounded up to the next multiple of ``mult``."""
+    return ((x + mult - 1) // mult) * mult
+
+
+def clamp_m_blk(m: int, m_blk: int) -> int:
+    """Clamp a lane-tile request to the target's (sublane-padded) rows.
+
+    Never tile (and pad) wider than the target: small serve-bucket rows
+    would otherwise pay ``m_blk`` lanes of identity work per plane.
+    Multiples of :data:`SUBLANES` keep sublane alignment; use 128+ on
+    hardware.  Both the ``rotseq_batched`` wrapper and the registry cost
+    guard call this one definition, so the kernel the cost model prices
+    is the kernel that actually launches.
+    """
+    return min(m_blk, round_up(max(1, m), SUBLANES))

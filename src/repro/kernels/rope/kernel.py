@@ -31,6 +31,10 @@ def _rope_kernel(cos_ref, sin_ref, q_ref, k_ref, qo_ref, ko_ref,
         x2 = x[..., half:]
         cc = c[:, None, :]
         ss = s[:, None, :]
+        # RoPE's half-split convention rotates (x1, x2) with its own
+        # sign layout; it is not part of the rotation-sequence bitwise
+        # contract, so the canonical plane_update does not apply here.
+        # repro-lint: disable-next=RA301
         out = jnp.concatenate([x1 * cc - x2 * ss, x1 * ss + x2 * cc],
                               axis=-1)
         o_ref[...] = out.reshape(blk, heads * head_dim)

@@ -34,4 +34,8 @@ def apply_rope_ref(x, cos, sin):
     x2 = x[..., half:]
     c = cos[..., :, None, :]
     s = sin[..., :, None, :]
-    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    # RoPE half-split convention, not the rotation-sequence contract
+    # (see kernels/rope/kernel.py).
+    # repro-lint: disable-next=RA301
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1)

@@ -14,14 +14,11 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core.blocked import num_tiles, pack_sheared
+from repro.kernels.limits import round_up
 
 from .kernel import rotseq_wave_pallas
 
 __all__ = ["rot_sequence_wave"]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
 
 
 @partial(
@@ -46,7 +43,7 @@ def rot_sequence_wave(A, C, S, *, n_b: int = 64, k_b: int = 16,
     n_b = min(n_b, max(8, n))
     T = num_tiles(n, n_b, k_b)
 
-    m_pad = _round_up(m, m_blk)
+    m_pad = round_up(m, m_blk)
     AT = jnp.pad(A.T, ((0, 0), (0, m_pad - m)))  # packed layout (n, m_pad)
 
     for p0 in range(0, k, k_b):

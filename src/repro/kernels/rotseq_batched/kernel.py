@@ -30,8 +30,8 @@ Residency: the whole ``(n, m_blk)`` slab stays in VMEM for all ``K``
 waves, and the scalar-indexed C/S/G panels stay in SMEM — the cost
 model (``registry.cost_rotseq_batched``) prices the kernel out of
 ``method="auto"`` when either exceeds its on-chip budget
-(``_SMEM_PANEL_BUDGET`` for the panels), since interpret mode would
-happily run grids Mosaic could never compile.
+(``repro.kernels.limits.SMEM_PANEL_BUDGET`` for the panels), since
+interpret mode would happily run grids Mosaic could never compile.
 """
 from __future__ import annotations
 

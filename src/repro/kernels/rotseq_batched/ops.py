@@ -14,14 +14,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.kernels.limits import clamp_m_blk, round_up
 
 from .kernel import rotseq_batched_pallas
 
 __all__ = ["rot_sequence_batched", "wave_windows", "count_live_planes"]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
 
 
 def wave_windows(C, S, G):
@@ -115,8 +112,8 @@ def rot_sequence_batched(A, C, S, *, reflect: bool = False, G=None,
     # never tile (and pad) wider than the target: small serve-bucket
     # rows would otherwise pay m_blk lanes of identity work per plane
     # (multiples of 8 keep sublane alignment; use 128+ on hardware)
-    m_blk = min(m_blk, _round_up(m, 8))
-    m_pad = _round_up(m, m_blk)
+    m_blk = clamp_m_blk(m, m_blk)
+    m_pad = round_up(m, m_blk)
     AT = jnp.pad(jnp.swapaxes(A, 1, 2), ((0, 0), (0, 0), (0, m_pad - m)))
     out, planes = rotseq_batched_pallas(
         AT, C, S, G, starts, counts,

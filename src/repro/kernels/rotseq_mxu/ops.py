@@ -9,14 +9,11 @@ import jax.numpy as jnp
 from repro import compat
 from repro.core.accumulate import accumulate_tile_factors
 from repro.core.blocked import num_tiles, pack_sheared
+from repro.kernels.limits import round_up
 
 from .kernel import rotseq_mxu_pallas
 
 __all__ = ["rot_sequence_mxu"]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
 
 
 @partial(
@@ -39,7 +36,7 @@ def rot_sequence_mxu(A, C, S, *, n_b: int = 128, k_b: int = 128,
     n_b = min(n_b, max(8, n))
     T = num_tiles(n, n_b, k_b)
 
-    m_pad = _round_up(m, m_blk)
+    m_pad = round_up(m, m_blk)
     Ap = jnp.pad(A, ((0, m_pad - m), (0, 0)))
 
     for p0 in range(0, k, k_b):

@@ -1,0 +1,26 @@
+# repro-lint: fixture-as=src/repro/serve/good_citizen.py
+"""Clean fixture: a serve-layer module using only the typed API.
+
+Must produce zero violations under every rule family.
+"""
+from repro.core import RotationSequence
+from repro.core.rotations import plane_update
+from repro.kernels.limits import SMEM_PANEL_BUDGET, clamp_m_blk
+
+
+def plan_and_apply(seq: RotationSequence, A):
+    plan = seq.plan(like=A)
+    return plan.apply(A)
+
+
+def host_stencil(x, y, c, s):
+    # canonical stencil via plane_update, host-side sign is fine
+    return plane_update(x, y, c, s, -1.0)
+
+
+def fits_budget(planes: int, itemsize: int) -> bool:
+    return 3 * planes * itemsize <= SMEM_PANEL_BUDGET
+
+
+def tile(m: int) -> int:
+    return clamp_m_blk(m, 256)

@@ -1,0 +1,7 @@
+# repro-lint: fixture-as=tests/bad_x64.py
+"""RA103 fixture: jax_enable_x64 flipped without the compat context."""
+import jax
+
+
+def leak_x64():
+    jax.config.update("jax_enable_x64", True)  # expect: RA103

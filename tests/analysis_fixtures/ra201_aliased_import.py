@@ -1,0 +1,14 @@
+# repro-lint: fixture-as=src/repro/serve/bad_raw_apply.py
+"""RA201 regression fixture: the seq-gate grep false negative.
+
+The old Makefile gate searched for the literal pattern
+``apply_rotation_sequence\\s*\\(`` — this file never spells that, so
+grep reports nothing, yet it calls the raw wrapper from the serve
+layer.  RA201 resolves the import alias and flags both lines
+(tests/test_analysis.py asserts the grep finds zero matches here).
+"""
+from repro.core.api import apply_rotation_sequence as _ars  # expect: RA201
+
+
+def sneaky_apply(A, C, S):
+    return _ars(A, C, S)  # expect: RA201

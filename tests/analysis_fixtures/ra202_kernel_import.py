@@ -1,0 +1,10 @@
+# repro-lint: fixture-as=src/repro/models/bad_kernel_call.py
+"""RA202 fixture: rotseq kernel imported outside the dispatch layer.
+
+A direct kernel call skips the registry's SMEM/VMEM budget guard.
+"""
+from repro.kernels.rotseq_batched.ops import rot_sequence_batched  # expect: RA202
+
+
+def bad_direct_launch(A, C, S, G):
+    return rot_sequence_batched(A[None], C, S, G=G)  # expect: RA202

@@ -1,0 +1,11 @@
+# repro-lint: fixture-as=src/repro/eig/bad_backend_pin.py
+"""RA203 fixture: eig layer reaching below the typed sequence API.
+
+Pinning one backend here bypasses plan caching and the cost model —
+the incident that motivated the original eig-gate.
+"""
+from repro.core.blocked import rot_sequence_blocked  # expect: RA203
+
+
+def bad_pinned_apply(A, C, S):
+    return rot_sequence_blocked(A, C, S, n_b=128, k_b=64)  # expect: RA203

@@ -1,0 +1,27 @@
+# repro-lint: fixture-as=src/repro/core/bad_stencil.py
+"""RA301 fixture: hand-inlined 2x2 plane stencils.
+
+Both spellings of the second row (``s*x - c*y`` and ``-s*x + c*y``)
+must be caught; XLA contracts them into different multiply orders than
+``plane_update``'s canonical ``g * (s*x - c*y)``.
+"""
+import jax.numpy as jnp
+
+
+def bad_plain(x, y, c, s):
+    xn = c * x + s * y
+    yn = s * x - c * y  # expect: RA301
+    return xn, yn
+
+
+def bad_negated(x, y, c, s):
+    xn = c * x + s * y
+    yn = -s * x + c * y  # expect: RA301
+    return jnp.stack([xn, yn])
+
+
+def ok_sum_difference(x, y, a, b):
+    # same pairing on both lines: a plain sum/difference, not a plane
+    u = a * x + b * y
+    v = a * x - b * y
+    return u, v

@@ -1,0 +1,24 @@
+# repro-lint: fixture-as=src/repro/core/bad_sign.py
+"""RA302 fixture: fold-prone literal sign in a traced plane_update call.
+
+The PR 5 bug class: a Python scalar ``-1.0`` lets XLA constant-fold
+``g * (...)`` into a re-associated contraction, flipping low-order
+bits relative to the runtime-array path.
+"""
+import jax.numpy as jnp
+
+from repro.core.rotations import plane_update
+
+
+def bad_traced_literal(x, y, c, s):
+    return plane_update(jnp.asarray(x), y, c, s, -1.0)  # expect: RA302
+
+
+def ok_runtime_sign(x, y, c, s, refl):
+    g = jnp.where(refl, -1.0, 1.0)
+    return plane_update(jnp.asarray(x), y, c, s, g)
+
+
+def ok_host_numpy(x, y, c, s):
+    # host-side recurrence (eig layer): nothing folds it, exempt
+    return plane_update(x, y, c, s, -1.0)

@@ -1,0 +1,26 @@
+# repro-lint: fixture-as=src/repro/kernels/bad_kernel_host.py
+"""RA401 fixture: host round-trips inside a Pallas kernel body.
+
+Interpret mode executes these happily; Mosaic lowering cannot.
+"""
+import functools
+
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _bad_kernel(x_ref, o_ref, *, scale: float):
+    v = x_ref[...]
+    peek = float(v[0, 0])  # expect: RA401
+    probe = v[0, 0].item()  # expect: RA401
+    host = np.asarray(v)  # expect: RA401
+    del peek, probe, host
+    o_ref[...] = v * scale
+
+
+def bad_launch(x):
+    kernel = functools.partial(_bad_kernel, scale=2.0)
+    return pl.pallas_call(
+        kernel,
+        out_shape=x,
+    )(x)

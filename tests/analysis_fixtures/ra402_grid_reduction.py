@@ -1,0 +1,17 @@
+# repro-lint: fixture-as=src/repro/kernels/bad_grid_reduce.py
+"""RA402 fixture: jnp reduction over a traced grid index in a kernel."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bad_kernel(x_ref, o_ref):
+    w = jnp.sum(jnp.arange(8) * pl.program_id(0))  # expect: RA402
+    o_ref[...] = x_ref[...] + w
+
+
+def bad_launch(x):
+    return pl.pallas_call(
+        _bad_kernel,
+        grid=(4,),
+        out_shape=x,
+    )(x)

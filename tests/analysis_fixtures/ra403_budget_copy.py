@@ -1,0 +1,10 @@
+# repro-lint: fixture-as=src/repro/core/bad_budget.py
+"""RA403 fixture: on-chip budget constant redefined outside limits.py.
+
+The PR 5 coupling bug: a second copy of the budget lets the cost model
+price a kernel off stale limits.
+"""
+
+_SMEM_PANEL_BUDGET = 128 * 2**10  # expect: RA403
+
+VMEM_SLAB_BUDGET = 8 * 2**20  # expect: RA403

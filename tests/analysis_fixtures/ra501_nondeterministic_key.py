@@ -1,0 +1,30 @@
+# repro-lint: fixture-as=src/repro/core/bad_keys.py
+"""RA501 fixture: wall-clock/RNG in cache-key and cost-model paths.
+
+A timestamped plan key makes identical problems hash to different
+plans, silently defeating the on-disk plan store.
+"""
+import random
+import time
+
+import numpy as np
+
+
+def plan_key(problem) -> tuple:
+    return (problem.m, problem.n, time.time())  # expect: RA501
+
+
+def cost_flaky(problem, plan) -> float:
+    return 6.0 * problem.m * problem.k * random.random()  # expect: RA501
+
+
+def _bucket_key(seq) -> tuple:
+    return (seq.n, np.random.default_rng().integers(10))  # expect: RA501
+
+
+def _measure_plan(fn):
+    # measurement helpers may time things: name is outside the key/cost
+    # pattern, so this stays legal
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

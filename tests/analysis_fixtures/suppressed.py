@@ -1,0 +1,19 @@
+# repro-lint: fixture-as=src/repro/core/suppressed_stencil.py
+"""Suppression fixture: inline stencils silenced both ways.
+
+Must produce zero violations — exercises ``disable=`` on the line and
+``disable-next=`` on the preceding line.
+"""
+
+
+def quieted_inline(x, y, c, s):
+    xn = c * x + s * y
+    yn = s * x - c * y  # repro-lint: disable=RA301
+    return xn, yn
+
+
+def quieted_next_line(x, y, c, s):
+    xn = c * x + s * y
+    # repro-lint: disable-next=RA3
+    yn = -s * x + c * y
+    return xn, yn

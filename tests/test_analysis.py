@@ -1,0 +1,243 @@
+"""Tests for the repro.analysis static invariant analyzer.
+
+Fixture-driven: every file under ``tests/analysis_fixtures/`` carries
+``# expect: RAxxx`` markers; each rule's violations must match its
+fixture's marked (line, rule-id) set exactly — ids *and* line numbers.
+Plus: the grep-false-negative regression (seq-gate semantics vs RA201),
+suppression, baseline workflow, the mtime cache, the CLI, and the
+whole-tree zero-violation gate.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (all_rules, analyze_file, analyze_paths,
+                            baseline_key, load_baseline, rules_matching,
+                            write_baseline)
+from repro.analysis.engine import ModuleInfo, default_roots, repo_root
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "analysis_fixtures")
+
+_EXPECT_RE = re.compile(r"#\s*expect:\s*(RA\d+)")
+
+
+def expected_marks(path):
+    """(line, rule-id) pairs from ``# expect:`` markers in a fixture."""
+    out = set()
+    with open(path) as f:
+        for lineno, line in enumerate(f, start=1):
+            for m in _EXPECT_RE.finditer(line):
+                out.add((lineno, m.group(1)))
+    return out
+
+
+def fixture(name):
+    return os.path.join(FIXTURES, name)
+
+
+FIXTURE_FILES = sorted(
+    fn for fn in os.listdir(FIXTURES)
+    if fn.endswith(".py")
+)
+
+
+# --------------------------------------------------------------------------
+# per-fixture: violations == expect markers, ids and line numbers
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", FIXTURE_FILES)
+def test_fixture_matches_expect_markers(name):
+    path = fixture(name)
+    got = {(v.line, v.rule)
+           for v in analyze_file(path, all_rules(), explicit=True)}
+    assert got == expected_marks(path), (
+        f"{name}: analyzer reported {sorted(got)}, "
+        f"markers say {sorted(expected_marks(path))}")
+
+
+def test_every_rule_has_a_failing_fixture():
+    covered = set()
+    for name in FIXTURE_FILES:
+        covered |= {rule for _, rule in expected_marks(fixture(name))}
+    all_ids = {r.id for r in all_rules()}
+    assert all_ids <= covered, f"rules without fixtures: {all_ids - covered}"
+
+
+def test_clean_and_suppressed_fixtures_are_clean():
+    for name in ("clean_module.py", "suppressed.py"):
+        vs = analyze_file(fixture(name), all_rules(), explicit=True)
+        assert vs == [], [v.format() for v in vs]
+
+
+# --------------------------------------------------------------------------
+# the grep false negative (satellite: seq-gate regression)
+# --------------------------------------------------------------------------
+
+def test_grep_misses_aliased_import_but_ra201_catches_it():
+    """The exact seq-gate regex finds nothing in the aliased fixture."""
+    path = fixture("ra201_aliased_import.py")
+    with open(path) as f:
+        source = f.read()
+    # the old Makefile seq-gate pattern, verbatim
+    assert not re.search(r"apply_rotation_sequence\s*\(", source)
+    got = {v.rule for v in analyze_file(path, rules_matching(["RA201"]),
+                                        explicit=True)}
+    assert got == {"RA201"}
+
+
+def test_ra201_resolves_alias_to_both_import_and_call():
+    path = fixture("ra201_aliased_import.py")
+    vs = analyze_file(path, rules_matching(["RA201"]), explicit=True)
+    assert len(vs) == 2  # the import line and the call line
+
+
+# --------------------------------------------------------------------------
+# scoping and engine mechanics
+# --------------------------------------------------------------------------
+
+def test_fixture_as_pragma_sets_logical_module():
+    mi = ModuleInfo(fixture("ra203_layer_bypass.py"),
+                    open(fixture("ra203_layer_bypass.py")).read(),
+                    "src/repro/eig/bad_backend_pin.py")
+    assert mi.module == "repro.eig.bad_backend_pin"
+
+
+def test_fixtures_are_skipped_in_tree_walks():
+    vs = analyze_paths([FIXTURES], all_rules(), use_cache=False)
+    assert vs == []
+
+
+def test_rules_matching_selects_families():
+    assert {r.id for r in rules_matching(["RA2"])} == \
+        {"RA201", "RA202", "RA203"}
+    assert [r.id for r in rules_matching(["RA301"])] == ["RA301"]
+    assert rules_matching(["RA9"]) == []
+
+
+def test_layer_scoped_rules_ignore_test_modules(tmp_path):
+    # same offending code, but logically under tests/: RA2 is
+    # library-scoped, so this must be clean
+    p = tmp_path / "probe.py"
+    p.write_text(
+        "# repro-lint: fixture-as=tests/probe.py\n"
+        "from repro.kernels.rotseq_batched.ops import "
+        "rot_sequence_batched\n")
+    assert analyze_file(str(p), rules_matching(["RA202"]),
+                        explicit=True) == []
+
+
+# --------------------------------------------------------------------------
+# baseline workflow
+# --------------------------------------------------------------------------
+
+def test_baseline_roundtrip_grandfathers_by_content_not_line(tmp_path):
+    path = fixture("ra403_budget_copy.py")
+    vs = analyze_file(path, rules_matching(["RA403"]), explicit=True)
+    assert vs
+    bl = tmp_path / "baseline.json"
+    write_baseline(vs, str(bl))
+    entries = load_baseline(str(bl))
+    assert all(baseline_key(v) in entries for v in vs)
+    # keys are line-independent: unrelated edits above must not
+    # un-baseline an entry
+    assert not any(f"::{v.line}::" in k
+                   for v in vs for k in entries)
+
+
+def test_missing_baseline_is_empty():
+    assert load_baseline("/nonexistent/baseline.json") == set()
+
+
+# --------------------------------------------------------------------------
+# mtime cache
+# --------------------------------------------------------------------------
+
+def test_cache_hits_and_invalidates_on_edit(tmp_path, monkeypatch):
+    cache = tmp_path / "lint_cache.json"
+    monkeypatch.setenv("REPRO_LINT_CACHE", str(cache))
+    target = tmp_path / "mod.py"
+    target.write_text(
+        "# repro-lint: fixture-as=src/repro/core/tmp_mod.py\n"
+        "_SMEM_PANEL_BUDGET = 1\n")
+    rules = rules_matching(["RA403"])
+
+    first = analyze_paths([str(target)], rules, explicit_fixtures=True)
+    assert [v.rule for v in first] == ["RA403"]
+    assert cache.exists()
+
+    # warm hit: same result without re-analysis
+    second = analyze_paths([str(target)], rules, explicit_fixtures=True)
+    assert [(v.rule, v.line) for v in second] == \
+        [(v.rule, v.line) for v in first]
+
+    # edit the file (bump mtime + size): violation disappears
+    target.write_text(
+        "# repro-lint: fixture-as=src/repro/core/tmp_mod.py\n"
+        "from repro.kernels.limits import SMEM_PANEL_BUDGET\n")
+    os.utime(target, (os.path.getmtime(target) + 5,) * 2)
+    third = analyze_paths([str(target)], rules, explicit_fixtures=True)
+    assert third == []
+
+
+def test_cache_off_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_LINT_CACHE", "off")
+    vs = analyze_paths([fixture("ra403_budget_copy.py")],
+                       rules_matching(["RA403"]), explicit_fixtures=True)
+    assert [v.rule for v in vs] == ["RA403", "RA403"]
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def _run_cli(*argv, env_extra=None):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo_root(), "src"),
+               REPRO_LINT_CACHE="off")
+    env.update(env_extra or {})
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=repo_root())
+
+
+def test_cli_fixture_fails_with_exit_1_and_ids():
+    res = _run_cli(os.path.join("tests", "analysis_fixtures",
+                                "ra201_aliased_import.py"))
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "RA201" in res.stdout
+
+
+def test_cli_json_output():
+    res = _run_cli("--json", os.path.join("tests", "analysis_fixtures",
+                                          "ra403_budget_copy.py"))
+    payload = json.loads(res.stdout)
+    assert [v["rule"] for v in payload["violations"]] == \
+        ["RA403", "RA403"]
+
+
+def test_cli_list_rules_names_every_family():
+    res = _run_cli("--list-rules")
+    assert res.returncode == 0
+    for rid in ("RA101", "RA201", "RA301", "RA401", "RA501"):
+        assert rid in res.stdout
+
+
+def test_cli_unknown_rule_selector_errors():
+    res = _run_cli("--rules", "RA9")
+    assert res.returncode == 2
+
+
+# --------------------------------------------------------------------------
+# the gate itself: whole tree is clean
+# --------------------------------------------------------------------------
+
+def test_whole_tree_has_zero_nonbaselined_violations():
+    baseline = load_baseline()
+    vs = [v for v in analyze_paths(default_roots(), all_rules(),
+                                   use_cache=False)
+          if baseline_key(v) not in baseline]
+    assert vs == [], "\n".join(v.format() for v in vs)
