@@ -11,7 +11,7 @@
 # below as thin aliases for one release.
 
 .PHONY: check lint analyze ruff test compat-gate eig-gate seq-gate \
-	serve-gate smoke bench bench-artifacts bench-compare
+	serve-gate smoke bench bench-artifacts bench-compare obs-report
 
 check: lint test
 
@@ -80,3 +80,12 @@ bench-compare:
 	PYTHONPATH=src:. python benchmarks/compare_baseline.py \
 		--baseline benchmarks/baselines/bench_baseline.json \
 		BENCH_smoke.json BENCH_eig.json BENCH_serve.json
+
+# Observability report: one obs-enabled rotation-serving run writing the
+# metrics + roofline snapshot (OBS_metrics.json) and a Perfetto-loadable
+# Chrome trace (trace.jsonl — load at ui.perfetto.dev).  See the
+# README "Observability" section for the metric catalogue.
+obs-report:
+	PYTHONPATH=src python -m repro.launch.serve --rotations \
+		--requests 24 --slots 8 --check \
+		--metrics-json OBS_metrics.json --trace trace.jsonl

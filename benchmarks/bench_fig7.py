@@ -13,7 +13,8 @@ import textwrap
 from benchmarks.common import emit
 
 _CODE = """
-import time, numpy as np, jax, jax.numpy as jnp
+import numpy as np, jax, jax.numpy as jnp
+from repro.obs import timing
 from repro.core.rotations import random_sequence
 from repro.core.distributed import (rot_sequence_row_sharded,
     rot_sequence_column_sharded_padded, column_sharded_comm_bytes)
@@ -29,8 +30,8 @@ def timed(fn):
     jax.block_until_ready(fn())
     ts = []
     for _ in range(3):
-        t0 = time.perf_counter(); jax.block_until_ready(fn())
-        ts.append(time.perf_counter() - t0)
+        t0 = timing.now(); jax.block_until_ready(fn())
+        ts.append(timing.now() - t0)
     return sorted(ts)[1]
 
 row = timed(lambda: rot_sequence_row_sharded(

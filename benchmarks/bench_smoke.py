@@ -6,7 +6,8 @@ twice — the second call must hit the plan cache.  This is the
 end-to-end liveness row for the dispatch subsystem, not a perf number.
 """
 from benchmarks.common import (apply_method, emit, flops_of, problem,
-                               registered_methods, select_plan, time_fn)
+                               registered_methods, select_plan, time_fn,
+                               timing)
 from repro.core.registry import plan_cache_stats
 
 M, N, K = 16, 33, 7
@@ -46,8 +47,6 @@ def run():
                   "plan_apply_us": dt_plan * 1e6})
 
     # eigensolver liveness: QR path end-to-end through the delayed buffer
-    import time
-
     import numpy as np
     import jax.numpy as jnp
 
@@ -56,9 +55,9 @@ def run():
     rng = np.random.default_rng(0)
     X = rng.standard_normal((16, 16)).astype(np.float32)
     H = jnp.asarray((X + X.T) / 2)
-    t0 = time.perf_counter()
+    t0 = timing.now()
     w, V = eigh_givens(H, method="qr", k_delay=8)
-    dt = time.perf_counter() - t0
+    dt = timing.now() - t0
     resid = float(jnp.abs(V.T @ H @ V - jnp.diag(w)).max())
     assert resid < 1e-4, f"eigh_givens residual {resid}"
     emit("smoke/eigh_qr_n16", dt, f"resid_{resid:.1e}")

@@ -1,8 +1,13 @@
-"""Shared benchmark utilities: timing + CSV emission + JSON artifacts."""
+"""Shared benchmark utilities: timing + CSV emission + JSON artifacts.
+
+Timing is sourced from :mod:`repro.obs.timing` — the single sanctioned
+clock (analyzer rule RA502).  This module is the one shim outside
+``repro.obs`` allowed to re-export it, so per-file benchmark code never
+touches ``time`` directly.
+"""
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -11,9 +16,10 @@ import numpy as np
 from repro.core.api import apply_rotation_sequence
 from repro.core.registry import registered_methods, select_plan
 from repro.core.rotations import random_sequence
+from repro.obs import timing
 
 __all__ = ["time_fn", "emit", "problem", "flops_of", "apply_method",
-           "registered_methods", "select_plan",
+           "registered_methods", "select_plan", "timing",
            "reset_results", "collected_results", "write_json"]
 
 
@@ -70,9 +76,9 @@ def time_fn(fn, *args, reps: int = 3, warmup: int = 1) -> float:
         jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(reps):
-        t0 = time.perf_counter()
+        t0 = timing.now()
         jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
+        ts.append(timing.now() - t0)
     return sorted(ts)[len(ts) // 2]
 
 

@@ -62,6 +62,24 @@ SPEC = {
     # outage and fails CI instead of warning.
     "serve/bucketed:req_s": dict(higher_is_better=True, rel_tol=0.30,
                                  warn_only=True, live_floor=1.0),
+    # real-vs-pad accounting (the PR 7 throughput fix): identity pad
+    # slots on partially-full buckets are counted separately from real
+    # requests and must stay at exactly zero for the canonical demo
+    # stream (three exactly-full buckets).
+    "serve/bucketed:pad_slots": dict(higher_is_better=False, rel_tol=0.0,
+                                     count=True),
+    "serve/bucketed:pad_slot_fraction": dict(higher_is_better=False,
+                                             rel_tol=0.0, count=True),
+    # obs-attributed serving telemetry (PR 7), warn-only context rows:
+    # a fresh service resolving the canonical shapes must find every
+    # plan in the process plan cache (hit rate 1.0), and the
+    # admit->drain p99 tracks the tail a caller actually experiences.
+    "serve/bucketed:plan_cache_hit_rate": dict(higher_is_better=True,
+                                               rel_tol=0.10,
+                                               warn_only=True,
+                                               live_floor=0.0),
+    "serve/bucketed:latency_p99_ms": dict(higher_is_better=False,
+                                          rel_tol=0.50, warn_only=True),
     "serve/shared_batch:speedup": dict(higher_is_better=True,
                                        rel_tol=0.30, warn_only=True,
                                        live_floor=0.05),

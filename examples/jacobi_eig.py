@@ -8,12 +8,11 @@ appliers (paper SS5.1), then a Golub-Kahan ``svd_givens`` round-trip.
 
     PYTHONPATH=src python examples/jacobi_eig.py
 """
-import time
-
 import jax.numpy as jnp
 import numpy as np
 
 from repro.eig import eigh_givens, svd_givens
+from repro.obs import timing
 
 n = 64
 rng = np.random.default_rng(0)
@@ -27,9 +26,9 @@ print(f"{'method':>8} {'val err':>10} {'|V^T V - I|':>12} "
       f"{'|V^T H V - L|':>14} {'time':>8}")
 results = {}
 for method in ("jacobi", "qr"):
-    t0 = time.perf_counter()
+    t0 = timing.now()
     w, V = eigh_givens(H, method=method, k_delay=32)
-    dt = time.perf_counter() - t0
+    dt = timing.now() - t0
     Vn = np.asarray(V, np.float64)
     val_err = np.abs(np.asarray(w) - ref).max() / scale
     orth = np.abs(Vn.T @ Vn - np.eye(n)).max()
@@ -43,9 +42,9 @@ assert all(r[0] < 1e-4 and r[2] < 1e-3 for r in results.values())
 
 m, k = 96, 48
 A = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-t0 = time.perf_counter()
+t0 = timing.now()
 U, s, Vt = svd_givens(A)
-dt = time.perf_counter() - t0
+dt = timing.now() - t0
 sr = np.linalg.svd(np.asarray(A, np.float64), compute_uv=False)
 rec = np.abs(np.asarray(U, np.float64) @ np.diag(np.asarray(s, np.float64))
              @ np.asarray(Vt, np.float64) - np.asarray(A)).max()

@@ -7,13 +7,12 @@ plan-once/apply-many flow (plus autodiff) of the first-class
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import apply_rotation_sequence, random_sequence
+from repro.obs import timing
 
 m, n, k = 1024, 512, 64
 A = jnp.asarray(np.random.default_rng(0).standard_normal((m, n)),
@@ -31,9 +30,9 @@ for method, kw in [
 ]:
     fn = lambda: seq.apply(A, method=method, **kw)
     out = jax.block_until_ready(fn())
-    t0 = time.perf_counter()
+    t0 = timing.now()
     jax.block_until_ready(fn())
-    dt = time.perf_counter() - t0
+    dt = timing.now() - t0
     if ref is None:
         ref = out
     err = float(jnp.abs(out - ref).max())

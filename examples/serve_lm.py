@@ -2,11 +2,10 @@
 
     PYTHONPATH=src python examples/serve_lm.py
 """
-import time
-
 import jax
 
 from repro.configs import get_config
+from repro.obs import timing
 from repro.models import build_model
 from repro.serve import ServeEngine
 
@@ -16,9 +15,9 @@ params = model.init(jax.random.key(0))
 
 eng = ServeEngine(model, cfg, params, batch=4, max_len=96)
 prompts = [[1, 2, 3, 4], [10, 11], [42, 43, 44], [7]]
-t0 = time.perf_counter()
+t0 = timing.now()
 outs = eng.generate(prompts, max_new=24)
-dt = time.perf_counter() - t0
+dt = timing.now() - t0
 for p, o in zip(prompts, outs):
     print(f"prompt={p} -> completion={o}")
 tok = sum(map(len, outs))

@@ -14,8 +14,9 @@ or encoding a contract no grep could see:
 * **RA4xx kernel hygiene** — no host round-trips or grid-dim
   reductions inside Pallas kernel bodies; on-chip budgets and tile
   clamps single-sourced in :mod:`repro.kernels.limits`.
-* **RA5xx plan-cache determinism** — no wall-clock or RNG in cache-key
-  or cost-model code paths.
+* **RA5xx plan-cache determinism + timing discipline** — no wall-clock
+  or RNG in cache-key or cost-model code paths; all measurement clocks
+  routed through :mod:`repro.obs.timing`.
 
 Suppress a single line with ``# repro-lint: disable=RA301`` (or the
 family, ``disable=RA3``); grandfather legacy hits via the baseline file
@@ -748,6 +749,69 @@ class RA501NondeterministicKeyPath(Rule):
                         f"'{fn.name}'; keys and costs must be pure")
 
 
+class RA502AdHocTiming(Rule):
+    """Ad-hoc wall-clock timing outside ``repro.obs``.
+
+    Incident (PR 7): the benchmarks, the train loop, the serve launcher
+    and three examples each carried a private ``time.perf_counter()``
+    stopwatch.  When the serving throughput row was found to count
+    identity pad slots as served requests, every copy had to be audited
+    by hand to establish which numbers were comparable — and none of
+    them fed the roofline attribution, so model-vs-measured fractions
+    silently excluded exactly the paths people quoted.
+    :mod:`repro.obs.timing` is the single sanctioned clock
+    (``benchmarks.common`` is the one shim allowed to re-export it);
+    library, benchmark and example code must not reference the stdlib
+    clocks or ``timeit`` directly.  Tests are out of scope: they assert
+    on behaviour, not on published numbers.
+    """
+
+    id = "RA502"
+    title = "ad-hoc timing outside repro.obs"
+
+    SCOPES = ("repro", "benchmarks", "examples")
+    EXEMPT = {"repro.obs", "benchmarks.common"}
+    CLOCKS = ("time.time", "time.time_ns", "time.perf_counter",
+              "time.perf_counter_ns", "time.monotonic",
+              "time.monotonic_ns", "time.process_time",
+              "time.process_time_ns")
+
+    def _scoped(self, mi: ModuleInfo) -> bool:
+        if not any(mi.module == s or mi.module.startswith(s + ".")
+                   for s in self.SCOPES):
+            return False
+        return not (mi.module in self.EXEMPT
+                    or mi.module.startswith("repro.obs."))
+
+    @staticmethod
+    def _is_timeit(dotted: str) -> bool:
+        return dotted == "timeit" or dotted.startswith("timeit.")
+
+    def check(self, mi: ModuleInfo) -> Iterable[Violation]:
+        if not self._scoped(mi):
+            return
+        for line, target in mi.import_targets:
+            if self._is_timeit(target):
+                yield Violation(self.id, mi.logical, line,
+                                "import of timeit; time through "
+                                "repro.obs.timing instead")
+            elif target in self.CLOCKS:
+                yield Violation(self.id, mi.logical, line,
+                                f"import of stdlib clock '{target}'; use "
+                                f"repro.obs.timing.now()")
+        for node, dotted in mi.references():
+            if dotted in self.CLOCKS:
+                yield self.hit(
+                    mi, node,
+                    f"ad-hoc clock '{dotted}'; repro.obs.timing is the "
+                    f"single sanctioned timing home")
+            elif self._is_timeit(dotted):
+                yield self.hit(
+                    mi, node,
+                    f"timeit reference '{dotted}'; time through "
+                    f"repro.obs.timing instead")
+
+
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
@@ -766,6 +830,7 @@ ALL_RULES: Tuple[type, ...] = (
     RA403BudgetConstantOutsideLimits,
     RA404RederivedClamp,
     RA501NondeterministicKeyPath,
+    RA502AdHocTiming,
 )
 
 

@@ -38,6 +38,7 @@ __all__ = [
     "tpu_compiler_params",
     "default_platform",
     "is_tpu",
+    "is_tracer",
     "pallas_interpret_default",
     "enable_x64",
     "x64_enabled",
@@ -178,6 +179,30 @@ def default_platform() -> str:
 
 def is_tpu() -> bool:
     return default_platform() == "tpu"
+
+
+def _tracer_class():
+    """Resolve the abstract-tracer base across the jax.core shuffles."""
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        core = getattr(jax, "core", None)
+        return getattr(core, "Tracer", None) if core is not None else None
+
+
+_TRACER_CLS = _tracer_class()
+
+
+def is_tracer(x: Any) -> bool:
+    """Whether ``x`` is an abstract tracer (inside jit/vmap/grad).
+
+    Host-side instrumentation (repro.obs spans, roofline timing) must
+    be a no-op under tracing — there is no concrete value to time and
+    ``block_until_ready`` would be meaningless — so every instrumented
+    seam guards with this.
+    """
+    return _TRACER_CLS is not None and isinstance(x, _TRACER_CLS)
 
 
 def pallas_interpret_default() -> bool:

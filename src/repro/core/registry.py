@@ -32,10 +32,10 @@ import json
 import math
 import os
 import tempfile
-import time
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro import compat
+from repro import compat, obs
+from repro.obs import timing as _timing
 
 __all__ = [
     "Hardware", "PLATFORMS", "Problem", "Plan", "Capability", "BackendSpec",
@@ -44,6 +44,7 @@ __all__ = [
     "pallas_wave_tiles", "pallas_mxu_tiles", "rotseq_batched_tiles",
     "select_plan", "plan_cache_stats", "clear_plan_cache",
     "plan_cache_path", "save_plan_cache", "load_plan_cache",
+    "cost_components",
 ]
 
 
@@ -234,28 +235,43 @@ def _roofline_seconds(flop_term: float, byte_term: float) -> float:
     return max(flop_term, byte_term, _LATENCY_FLOOR)
 
 
+def _components_unoptimized(p: Problem, plan: Plan) -> Tuple[float, float]:
+    flops = 6.0 * p.m_total * p.n * p.k
+    memops = 4.0 * p.m_total * p.n * p.k * p.itemsize
+    return flops, memops
+
+
 def cost_unoptimized(p: Problem, plan: Plan) -> float:
     """Alg 1.2: 4 memops per rotation, no reuse (paper SS6 baseline)."""
     hw = p.hardware
-    flops = 6.0 * p.m_total * p.n * p.k
-    memops = 4.0 * p.m_total * p.n * p.k * p.itemsize
+    flops, memops = _components_unoptimized(p, plan)
     return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+
+
+def _components_wavefront(p: Problem, plan: Plan) -> Tuple[float, float]:
+    flops = 6.0 * p.m_total * p.n * p.k
+    memops = 2.0 * p.m_total * p.n * p.k * p.itemsize
+    return flops, memops
 
 
 def cost_wavefront(p: Problem, plan: Plan) -> float:
     """Alg 1.3: wavefront fuses column touches to ~2 memops/rotation."""
     hw = p.hardware
-    flops = 6.0 * p.m_total * p.n * p.k
-    memops = 2.0 * p.m_total * p.n * p.k * p.itemsize
+    flops, memops = _components_wavefront(p, plan)
     return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+
+
+def _components_blocked(p: Problem, plan: Plan) -> Tuple[float, float]:
+    k_b = plan.k_b or 16
+    flops = 6.0 * p.m_total * p.n * p.k
+    memops = 2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b)
+    return flops, memops
 
 
 def cost_blocked(p: Problem, plan: Plan) -> float:
     """Blocked wavefront: A streams once per band of k_b waves (SS5)."""
     hw = p.hardware
-    k_b = plan.k_b or 16
-    flops = 6.0 * p.m_total * p.n * p.k
-    memops = 2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b)
+    flops, memops = _components_blocked(p, plan)
     return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
 
 
@@ -274,6 +290,14 @@ def _accumulated_flops(p: Problem, n_b: int, k_b: int) -> Tuple[float, float]:
     sweep = bands * tiles * 2.0 * p.m_total * w * w      # (m,w) @ (w,w)
     accum = bands * tiles * 6.0 * w * n_b * k_b          # Q_t = I rotated
     return sweep, accum
+
+
+def _components_accumulated(p: Problem, plan: Plan) -> Tuple[float, float]:
+    n_b = plan.n_b or 128
+    k_b = plan.k_b or 128
+    sweep, accum = _accumulated_flops(p, n_b, k_b)
+    memops = 2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b)
+    return sweep + accum, memops
 
 
 def cost_accumulated(p: Problem, plan: Plan) -> float:
@@ -303,6 +327,13 @@ def cost_pallas_mxu(p: Problem, plan: Plan) -> float:
                _LATENCY_FLOOR)
 
 
+def _components_rotseq_batched(p: Problem, plan: Plan) -> Tuple[float, float]:
+    flops = 6.0 * p.m_total * p.planes_live
+    memops = (2.0 * p.m_total * p.n
+              + 3.0 * max(1, p.batch) * p.planes_total) * p.itemsize
+    return flops, memops
+
+
 def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
     """Fused multi-request kernel (SS6 applied across requests).
 
@@ -315,9 +346,7 @@ def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
     through.
     """
     hw = p.hardware
-    flops = 6.0 * p.m_total * p.planes_live
-    memops = (2.0 * p.m_total * p.n
-              + 3.0 * max(1, p.batch) * p.planes_total) * p.itemsize
+    flops, memops = _components_rotseq_batched(p, plan)
     secs = _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
     # On-chip residency bounds, priced out rather than hard-filtered:
     # the (n, m_blk) slab must fit in VMEM for the single-pass
@@ -334,6 +363,39 @@ def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
             or panel_bytes > SMEM_PANEL_BUDGET):
         secs *= 1e3
     return max(secs * _interpret_factor(p), _LATENCY_FLOOR)
+
+
+# the (flops, bytes) arithmetic behind each cost model, exposed so the
+# obs roofline layer attributes dispatches with the *same* numbers the
+# planner ranked candidates with (pallas kernels move blocked /
+# accumulated traffic; only their seconds constant differs)
+_COMPONENT_FNS: Dict[str, Callable[[Problem, Plan], Tuple[float, float]]] = {
+    "unoptimized": _components_unoptimized,
+    "wavefront": _components_wavefront,
+    "blocked": _components_blocked,
+    "accumulated": _components_accumulated,
+    "pallas_wave": _components_blocked,
+    "pallas_mxu": _components_accumulated,
+    "rotseq_batched": _components_rotseq_batched,
+}
+
+
+def cost_components(method: str, problem: Problem,
+                    plan: Optional[Plan] = None) -> dict:
+    """Predicted ``{"flops", "bytes", "seconds"}`` for one dispatch.
+
+    ``flops``/``bytes`` come from the §6 memory-operation analysis of
+    the named backend (zero for backends registered without a component
+    entry); ``seconds`` is the registered cost model itself, so
+    ``seconds`` always matches what ``select_plan`` ranked by.  Pure
+    arithmetic — safe to call from metrics/snapshot paths (RA5).
+    """
+    spec = get_backend(method)
+    plan = plan if plan is not None else Plan(method=method)
+    comp = _COMPONENT_FNS.get(method)
+    flops, memops = comp(problem, plan) if comp is not None else (0.0, 0.0)
+    return {"flops": float(flops), "bytes": float(memops),
+            "seconds": float(spec.cost(problem, plan))}
 
 
 # --------------------------------------------------------------------------
@@ -704,9 +766,9 @@ def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
     jax.block_until_ready(fn())  # compile
     ts = []
     for _ in range(reps):
-        t0 = time.perf_counter()
+        t0 = _timing.now()
         jax.block_until_ready(fn())
-        ts.append(time.perf_counter() - t0)
+        ts.append(_timing.now() - t0)
     return sorted(ts)[len(ts) // 2]
 
 
@@ -762,8 +824,10 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     if cached is not None and (not autotune
                                or cached.source in _PERSISTED_SOURCES):
         _CACHE_STATS["hits"] += 1
+        obs.inc("registry.plan_cache.hits")
         return cached
     _CACHE_STATS["misses"] += 1
+    obs.inc("registry.plan_cache.misses")
 
     if n < 2 or k < 1 or m < 1:
         # degenerate: zero rotations (or empty A) — application is a
@@ -773,38 +837,49 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
         _PLAN_CACHE[key] = best
         return best
 
-    if not autotune:
-        borrowed = _interpolated_plan(problem, key)
-        if borrowed is not None:
-            _PLAN_CACHE[key] = borrowed
-            return borrowed
-    plans = _modeled_plans(problem)
-    if not plans:
-        raise ValueError(
-            f"no registered backend is eligible for {problem}"
-        )
-    best = plans[0]
-    if autotune:
-        candidates = plans[:max(1, autotune_top)]
-        # an interpolated entry being upgraded is a real hint: measure
-        # its tiles too, even when the model does not rank them top-N
-        if cached is not None and cached.source == "interpolated" \
-                and not any(
-                    (pl.method, pl.n_b, pl.k_b, pl.m_blk)
-                    == (cached.method, cached.n_b, cached.k_b, cached.m_blk)
-                    for pl in candidates):
-            candidates = candidates + [cached]
-        timed = []
-        for plan in candidates:
-            try:
-                secs = _measure_plan(problem, plan)
-            except Exception:  # backend crashed at these tiles: skip it
-                continue
-            timed.append(dataclasses.replace(
-                plan, est_seconds=secs, source="measured"))
-        if timed:
-            best = min(timed, key=lambda pl: pl.est_seconds)
-    _PLAN_CACHE[key] = best
+    with obs.span("resolve", m=m, n=n, k=k, batch=batch, dtype=dtype,
+                  platform=platform, autotune=autotune) as sp:
+        if not autotune:
+            borrowed = _interpolated_plan(problem, key)
+            if borrowed is not None:
+                _PLAN_CACHE[key] = borrowed
+                obs.inc("registry.plan_cache.interpolated")
+                sp.set(method=borrowed.method, source="interpolated")
+                return borrowed
+        plans = _modeled_plans(problem)
+        if not plans:
+            raise ValueError(
+                f"no registered backend is eligible for {problem}"
+            )
+        best = plans[0]
+        if autotune:
+            candidates = plans[:max(1, autotune_top)]
+            # an interpolated entry being upgraded is a real hint:
+            # measure its tiles too, even when the model does not rank
+            # them top-N
+            if cached is not None and cached.source == "interpolated" \
+                    and not any(
+                        (pl.method, pl.n_b, pl.k_b, pl.m_blk)
+                        == (cached.method, cached.n_b, cached.k_b,
+                            cached.m_blk)
+                        for pl in candidates):
+                candidates = candidates + [cached]
+            timed = []
+            for plan in candidates:
+                try:
+                    secs = _measure_plan(problem, plan)
+                except Exception:  # backend crashed at these tiles
+                    continue
+                timed.append(dataclasses.replace(
+                    plan, est_seconds=secs, source="measured"))
+            if timed:
+                best = min(timed, key=lambda pl: pl.est_seconds)
+                if cached is not None:
+                    # a cached (model/interpolated) entry was replaced
+                    # by a fresh measurement for the same key
+                    obs.inc("registry.plan_cache.autotune_upgrade")
+        _PLAN_CACHE[key] = best
+        sp.set(method=best.method, source=best.source)
     if best.source == "measured":
         save_plan_cache()  # write-through; no-op when persistence is off
     return best

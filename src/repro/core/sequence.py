@@ -53,6 +53,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat, obs
 from repro.core import registry
 
 __all__ = ["RotationSequence", "SequencePlan", "PLAN_DICT_FORMAT"]
@@ -423,10 +424,13 @@ class RotationSequence:
             return SequencePlan(self, _IDENTITY, (), None)
 
         if method == "auto":
-            plan = registry.select_plan(
-                m, n, k, dtype=dtype, platform=platform,
-                signs=self.sign is not None, sharded=sharded,
-                batch=batch, live_planes=self.k_live, autotune=autotune)
+            with obs.span("plan", m=m, n=n, k=k, batch=batch) as sp:
+                plan = registry.select_plan(
+                    m, n, k, dtype=dtype, platform=platform,
+                    signs=self.sign is not None, sharded=sharded,
+                    batch=batch, live_planes=self.k_live,
+                    autotune=autotune)
+                sp.set(method=plan.method, source=plan.source)
             planned = plan.kwargs()
             if n_b is not None:
                 planned["n_b"] = n_b
@@ -495,8 +499,18 @@ class SequencePlan:
         if self.method == _IDENTITY:
             return A
         seq = self.sequence
-        return _apply_planned(self.method, self.kwargs, seq.reflect,
-                              A, seq.cos, seq.sin, seq.sign)
+        if not obs.enabled() or compat.is_tracer(A):
+            return _apply_planned(self.method, self.kwargs, seq.reflect,
+                                  A, seq.cos, seq.sin, seq.sign)
+        with obs.span("apply", method=self.method, m=int(A.shape[0]),
+                      n=int(A.shape[1])):
+            t0 = obs.timing.now()
+            out = _apply_planned(self.method, self.kwargs, seq.reflect,
+                                 A, seq.cos, seq.sin, seq.sign)
+            out = jax.block_until_ready(out)
+            dt = obs.timing.now() - t0
+        self._record_dispatch(A, dt)
+        return out
 
     __call__ = apply
 
@@ -513,8 +527,17 @@ class SequencePlan:
         if self.method == _IDENTITY:
             return A
         seq = self.sequence
-        return _run_backend(self.method, self.kwargs, seq.reflect,
-                            A, seq.cos, seq.sin, seq.sign)
+        if not obs.enabled() or compat.is_tracer(A):
+            return _run_backend(self.method, self.kwargs, seq.reflect,
+                                A, seq.cos, seq.sin, seq.sign)
+        with obs.span("apply", method=self.method, direct=True):
+            t0 = obs.timing.now()
+            out = _run_backend(self.method, self.kwargs, seq.reflect,
+                               A, seq.cos, seq.sin, seq.sign)
+            out = jax.block_until_ready(out)
+            dt = obs.timing.now() - t0
+        self._record_dispatch(A, dt)
+        return out
 
     def apply_batched(self, A, sequences=None, *, direct: bool = False):
         """Apply to a batch of targets ``A`` of shape ``(b, m, n)``.
@@ -558,6 +581,19 @@ class SequencePlan:
                 f"got {A.shape} — use apply() for a single target")
         if self.method == _IDENTITY:
             return A
+        if not obs.enabled() or compat.is_tracer(A):
+            return self._apply_batched_impl(A, sequences, direct)
+        with obs.span("apply_batched", method=self.method,
+                      batch=int(A.shape[0]), m=int(A.shape[1]),
+                      n=int(A.shape[2])):
+            t0 = obs.timing.now()
+            out = self._apply_batched_impl(A, sequences, direct)
+            out = jax.block_until_ready(out)
+            dt = obs.timing.now() - t0
+        self._record_dispatch(A, dt)
+        return out
+
+    def _apply_batched_impl(self, A, sequences, direct: bool):
         seq = self.sequence
         b, m, n = A.shape
         if n != seq.n:
@@ -622,6 +658,43 @@ class SequencePlan:
             raise ValueError(
                 f"plan built for n={self.sequence.n} targets; "
                 f"got A.shape={A.shape}")
+
+    def _record_dispatch(self, A, measured_s: float) -> None:
+        """Roofline-attribute one completed host-side dispatch.
+
+        Called only on the obs-enabled, non-traced path, *after* the
+        result is device-complete: pairs the §6 cost model's predicted
+        flops/bytes/seconds for this exact (problem, backend, tile)
+        with the measured wall time (see :mod:`repro.obs.roofline`).
+        """
+        seq = self.sequence
+        if A.ndim == 3:
+            b, m = int(A.shape[0]), int(A.shape[1])
+        else:
+            b, m = 1, int(A.shape[0])
+        kw = dict(self.kwargs)
+        problem = registry.Problem(
+            m=m, n=seq.n, k=seq.k, dtype=str(A.dtype),
+            platform=compat.default_platform(),
+            signs=seq.sign is not None, batch=b, live_planes=seq.k_live)
+        rplan = self.plan if self.plan is not None else registry.Plan(
+            method=self.method, n_b=kw.get("n_b"), k_b=kw.get("k_b"),
+            m_blk=kw.get("m_blk"))
+        try:
+            comp = registry.cost_components(self.method, problem, rplan)
+        except ValueError:  # unregistered/identity method: no model
+            comp = {"flops": 0.0, "bytes": 0.0, "seconds": 0.0}
+        obs.roofline.record_dispatch(
+            backend=self.method, m_total=problem.m_total, n=seq.n,
+            k=seq.k, batch=b, dtype=str(A.dtype),
+            tile={key: val for key, val in kw.items()
+                  if key in ("n_b", "k_b", "m_blk")},
+            planes_live=problem.planes_live,
+            planes_total=problem.planes_total,
+            predicted_flops=comp["flops"], predicted_bytes=comp["bytes"],
+            predicted_s=comp["seconds"], measured_s=measured_s)
+        obs.inc("sequence.applies")
+        obs.observe("sequence.apply_seconds", measured_s)
 
     def rebind(self, sequence: RotationSequence) -> "SequencePlan":
         """Bind this (method, tiles) decision to a new same-shape sequence."""

@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["DelayedRotationBuffer"]
 
 
@@ -151,28 +153,35 @@ class DelayedRotationBuffer:
     def flush(self):
         """Apply all pending waves through the cached frozen plan."""
         if self._c:
-            seq = self._pending_sequence()
-            plan_key = (seq.k, seq.sign is not None)
-            plan = self._plans.get(plan_key)
-            if plan is None:
-                plan = seq.plan(like=self._M, method=self.method,
-                                autotune=self.autotune, **self.apply_kw)
-                self._plans[plan_key] = plan
-            else:
-                plan = plan.rebind(seq)
-            # host-driven accumulation is never differentiated through;
-            # the direct paths skip the custom_vjp wrapper (and keep the
-            # backend's native autodiff semantics if anyone ever does).
-            # A batched accumulator flushes all b bases through one
-            # batched application of the same frozen plan.
-            if self._M.ndim == 3:
-                self._M = plan.apply_batched(self._M, direct=True)
-            else:
-                self._M = plan.apply_direct(self._M)
-            self._c.clear()
-            self._s.clear()
-            self._g.clear()
-            self.flushes += 1
+            waves = len(self._c)
+            with obs.span("flush", waves=waves, planes=self.planes):
+                seq = self._pending_sequence()
+                plan_key = (seq.k, seq.sign is not None)
+                plan = self._plans.get(plan_key)
+                if plan is None:
+                    plan = seq.plan(like=self._M, method=self.method,
+                                    autotune=self.autotune,
+                                    **self.apply_kw)
+                    self._plans[plan_key] = plan
+                else:
+                    with obs.span("rebind"):
+                        plan = plan.rebind(seq)
+                # host-driven accumulation is never differentiated
+                # through; the direct paths skip the custom_vjp wrapper
+                # (and keep the backend's native autodiff semantics if
+                # anyone ever does).  A batched accumulator flushes all
+                # b bases through one batched application of the same
+                # frozen plan.
+                if self._M.ndim == 3:
+                    self._M = plan.apply_batched(self._M, direct=True)
+                else:
+                    self._M = plan.apply_direct(self._M)
+                self._c.clear()
+                self._s.clear()
+                self._g.clear()
+                self.flushes += 1
+            obs.inc("eig.flushes")
+            obs.observe("eig.waves_per_flush", waves, unit="waves")
         return self._M
 
     @property

@@ -12,7 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro import compat, obs
 from repro.core.blocked import num_tiles, pack_sheared
 from repro.kernels.limits import round_up
 
@@ -21,10 +21,6 @@ from .kernel import rotseq_wave_pallas
 __all__ = ["rot_sequence_wave"]
 
 
-@partial(
-    jax.jit,
-    static_argnames=("n_b", "k_b", "m_blk", "reflect", "interpret"),
-)
 def rot_sequence_wave(A, C, S, *, n_b: int = 64, k_b: int = 16,
                       m_blk: int = 256, reflect: bool = False, G=None,
                       interpret: bool | None = None):
@@ -34,7 +30,32 @@ def rot_sequence_wave(A, C, S, *, n_b: int = 64, k_b: int = 16,
     the Pallas wavefront kernel.  ``m_blk`` is clamped/padded so any ``m``
     works; on hardware use multiples of 128.  ``interpret=None`` resolves
     via the compat shim: compiled on TPU, interpreter elsewhere.
+
+    The host wrapper only adds obs accounting (launches, planes, modeled
+    bytes per the blocked-traffic term) around the jitted core — a no-op
+    while obs is off or under tracing.
     """
+    if obs.enabled() and not compat.is_tracer(A):
+        m, n = A.shape
+        J, k = C.shape
+        itemsize = jnp.dtype(A.dtype).itemsize
+        bands = max(1, math.ceil(k / max(1, k_b)))
+        obs.inc("kernels.rotseq.launches")
+        obs.inc("kernels.rotseq.planes_applied", J * k)
+        obs.inc("kernels.rotseq.bytes_moved",
+                int((2 * m * n * bands + 3 * J * k) * itemsize))
+    return _rot_sequence_wave_jit(A, C, S, n_b=n_b, k_b=k_b, m_blk=m_blk,
+                                  reflect=reflect, G=G,
+                                  interpret=interpret)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_b", "k_b", "m_blk", "reflect", "interpret"),
+)
+def _rot_sequence_wave_jit(A, C, S, *, n_b: int = 64, k_b: int = 16,
+                           m_blk: int = 256, reflect: bool = False,
+                           G=None, interpret: bool | None = None):
     if interpret is None:
         interpret = compat.pallas_interpret_default()
     m, n = A.shape

@@ -13,7 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro import compat, obs
 from repro.kernels.limits import clamp_m_blk, round_up
 
 from .kernel import rotseq_batched_pallas
@@ -66,10 +66,6 @@ def count_live_planes(seq) -> int:
     return int(counts.sum())
 
 
-@partial(
-    jax.jit,
-    static_argnames=("m_blk", "reflect", "interpret", "return_planes"),
-)
 def rot_sequence_batched(A, C, S, *, reflect: bool = False, G=None,
                          m_blk: int = 256, interpret: bool | None = None,
                          return_planes: bool = False):
@@ -90,7 +86,52 @@ def rot_sequence_batched(A, C, S, *, reflect: bool = False, G=None,
     Returns:
       The rotated targets with ``A``'s shape (and the ``(b, R)`` int32
       plane counts when ``return_planes``).
+
+    This host wrapper only adds obs accounting (launches, planes
+    applied vs skipped, modeled bytes moved) around the jitted core —
+    a no-op while obs is off or under tracing.
     """
+    if obs.enabled() and not compat.is_tracer(A):
+        _record_launch(A, C, S, G, reflect)
+    return _rot_sequence_batched_jit(
+        A, C, S, reflect=reflect, G=G, m_blk=m_blk, interpret=interpret,
+        return_planes=return_planes)
+
+
+def _record_launch(A, C, S, G, reflect: bool) -> None:
+    b = int(A.shape[0]) if A.ndim == 3 else 1
+    Cb = jnp.asarray(C)
+    if Cb.ndim == 2:
+        Cb = Cb[None]
+    Sb = jnp.asarray(S).reshape(Cb.shape)
+    if G is None:
+        Gb = jnp.full(Cb.shape, 1.0 if reflect else -1.0, Cb.dtype)
+    else:
+        Gb = jnp.asarray(G).reshape(Cb.shape)
+    bs, J, K = Cb.shape
+    _, counts = wave_windows(Cb, Sb, Gb)
+    # hull planes each target actually executes; shared waves (bs=1)
+    # replay the same windows on every target
+    applied = int(counts.sum()) * (b // bs)
+    total = J * K * b
+    itemsize = jnp.dtype(A.dtype).itemsize
+    m = int(A.shape[-2]) if A.ndim == 3 else int(A.shape[0])
+    n = int(A.shape[-1])
+    moved = (2 * b * m * n + 3 * bs * J * K) * itemsize
+    obs.inc("kernels.rotseq_batched.launches")
+    obs.inc("kernels.rotseq_batched.planes_applied", applied)
+    obs.inc("kernels.rotseq_batched.planes_skipped", total - applied)
+    obs.inc("kernels.rotseq_batched.bytes_moved", int(moved))
+
+
+@partial(
+    jax.jit,
+    static_argnames=("m_blk", "reflect", "interpret", "return_planes"),
+)
+def _rot_sequence_batched_jit(A, C, S, *, reflect: bool = False, G=None,
+                              m_blk: int = 256,
+                              interpret: bool | None = None,
+                              return_planes: bool = False):
     if interpret is None:
         interpret = compat.pallas_interpret_default()
     single = A.ndim == 2

@@ -1,12 +1,13 @@
 """Jit'd wrapper for the MXU rotation-sequence kernel."""
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro import compat, obs
 from repro.core.accumulate import accumulate_tile_factors
 from repro.core.blocked import num_tiles, pack_sheared
 from repro.kernels.limits import round_up
@@ -16,10 +17,6 @@ from .kernel import rotseq_mxu_pallas
 __all__ = ["rot_sequence_mxu"]
 
 
-@partial(
-    jax.jit,
-    static_argnames=("n_b", "k_b", "m_blk", "reflect", "interpret"),
-)
 def rot_sequence_mxu(A, C, S, *, n_b: int = 128, k_b: int = 128,
                      m_blk: int = 256, reflect: bool = False, G=None,
                      interpret: bool | None = None):
@@ -27,7 +24,31 @@ def rot_sequence_mxu(A, C, S, *, n_b: int = 128, k_b: int = 128,
 
     ``interpret=None`` resolves via the compat shim: compiled on TPU,
     interpreter elsewhere.
+
+    The host wrapper only adds obs accounting (launches, planes, modeled
+    bytes per the accumulated-traffic term) around the jitted core — a
+    no-op while obs is off or under tracing.
     """
+    if obs.enabled() and not compat.is_tracer(A):
+        m, n = A.shape
+        J, k = C.shape
+        itemsize = jnp.dtype(A.dtype).itemsize
+        bands = max(1, math.ceil(k / max(1, k_b)))
+        obs.inc("kernels.rotseq_mxu.launches")
+        obs.inc("kernels.rotseq_mxu.planes_applied", J * k)
+        obs.inc("kernels.rotseq_mxu.bytes_moved",
+                int((2 * m * n * bands + 3 * J * k) * itemsize))
+    return _rot_sequence_mxu_jit(A, C, S, n_b=n_b, k_b=k_b, m_blk=m_blk,
+                                 reflect=reflect, G=G, interpret=interpret)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_b", "k_b", "m_blk", "reflect", "interpret"),
+)
+def _rot_sequence_mxu_jit(A, C, S, *, n_b: int = 128, k_b: int = 128,
+                          m_blk: int = 256, reflect: bool = False,
+                          G=None, interpret: bool | None = None):
     if interpret is None:
         interpret = compat.pallas_interpret_default()
     m, n = A.shape

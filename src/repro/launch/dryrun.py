@@ -28,13 +28,13 @@ Usage::
 import argparse
 import json
 import re
-import time
 import traceback
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_skips
+from repro.obs import timing
 from repro.launch.mesh import make_production_mesh, make_rules_for_mesh
 from repro.launch.specs import (abstract_cache, abstract_opt_state,
                                 abstract_params, input_specs,
@@ -112,7 +112,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
     model = build_model(cfg)
     optimizer = AdamW(lr=1e-4, quantized=cfg.dryrun_q8)
 
-    t0 = time.time()
+    t0 = timing.now()
     with axis_rules(rules, mesh=mesh):
         trees = sharding_trees(model, cfg, shape, optimizer, rules, mesh)
         batch_abs = input_specs(cfg, shape)
@@ -159,9 +159,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             )
             lowered = jf.lower(params_abs, trees["cache_abs"], batch_abs)
 
-        t_lower = time.time() - t0
+        t_lower = timing.now() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = timing.now() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

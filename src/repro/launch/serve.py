@@ -12,14 +12,21 @@ per-request application, and timed::
 
   PYTHONPATH=src python -m repro.launch.serve --rotations \
       --requests 64 --slots 8
+
+With ``--metrics-json PATH`` the run executes with ``repro.obs``
+enabled and writes the full metrics + roofline snapshot (plan-cache
+counters, admit→drain latency histogram p50/p99, per-backend
+model-vs-measured fractions) to ``PATH``; ``--trace PATH`` additionally
+exports a Perfetto-loadable Chrome trace of the plan / admit / drain /
+apply spans.  ``make obs-report`` packages the canonical invocation.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 
+from repro import obs
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serve import ServeEngine
@@ -36,9 +43,9 @@ def _run_lm(args) -> None:
                       max_len=args.max_len)
     prompts = [[(7 * i + j) % cfg.vocab for j in range(4 + i)]
                for i in range(args.batch)]
-    t0 = time.perf_counter()
+    t0 = obs.timing.now()
     outs = eng.generate(prompts, max_new=args.max_new)
-    dt = time.perf_counter() - t0
+    dt = obs.timing.now() - t0
     toks = sum(len(o) for o in outs)
     for p, o in zip(prompts, outs):
         print(f"prompt {p} -> {o}")
@@ -57,10 +64,10 @@ def _run_rotations(args) -> None:
 
     svc = RotationService(slots=args.slots, autotune=args.autotune)
     misses0 = plan_cache_stats()["misses"]
-    t0 = time.perf_counter()
+    t0 = obs.timing.now()
     outs = svc.apply_many(requests)
     jax.block_until_ready(outs[-1])
-    dt = time.perf_counter() - t0
+    dt = obs.timing.now() - t0
     resolved = plan_cache_stats()["misses"] - misses0
 
     if args.check:
@@ -71,13 +78,30 @@ def _run_rotations(args) -> None:
         print("check: serving matches per-request application")
 
     s = svc.stats
-    rps = args.requests / dt
-    print(f"{args.requests} requests in {dt*1e3:.1f} ms "
-          f"({rps:.0f} req/s batched)")
+    # req/s counts *real* requests only — identity pad slots on
+    # partially-full buckets are accounted separately, never toward
+    # throughput
+    rps = s["requests"] / dt
+    print(f"{s['requests']} requests in {dt*1e3:.1f} ms "
+          f"({rps:.0f} req/s batched; {s['padded_slots']} pad slots of "
+          f"{s['slots_executed']} executed)")
     print(f"buckets={len(svc._plans)} batches={s['batches']} "
           f"plans_resolved={s['plans_resolved']} (registry misses "
           f"{resolved}) warm_plans={s['warm_plans']} "
           f"padded_slots={s['padded_slots']}")
+
+    if args.metrics_json:
+        snap = obs.write_metrics_json(
+            args.metrics_json,
+            extra={"mode": "rotations", "requests": s["requests"],
+                   "slots": args.slots, "seconds": dt})
+        lat = snap["histograms"].get("serve.request_latency_seconds", {})
+        print(f"metrics -> {args.metrics_json} "
+              f"(latency p50={lat.get('p50', 0)*1e3:.2f} ms "
+              f"p99={lat.get('p99', 0)*1e3:.2f} ms)")
+    if args.trace:
+        n_ev = obs.write_trace(args.trace)
+        print(f"trace -> {args.trace} ({n_ev} events)")
 
 
 def main():
@@ -98,8 +122,19 @@ def main():
                     help="rotation mode: measure bucket plans")
     ap.add_argument("--check", action="store_true",
                     help="rotation mode: verify against per-request apply")
+    ap.add_argument("--metrics-json", default=None,
+                    help="enable repro.obs and write the metrics + "
+                         "roofline snapshot here")
+    ap.add_argument("--trace", default=None,
+                    help="enable span tracing and write Chrome trace "
+                         "JSON here (view in ui.perfetto.dev)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.metrics_json or args.trace:
+        obs.set_enabled(True)
+        if args.trace:
+            obs.runtime.set_trace_path(args.trace)
 
     if args.rotations:
         _run_rotations(args)

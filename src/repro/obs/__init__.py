@@ -1,0 +1,97 @@
+"""repro.obs — zero-overhead-when-disabled observability.
+
+Three pieces (tentpole of PR 7):
+
+- **Metrics** (:mod:`repro.obs.metrics`): counters, gauges, and
+  deterministic log-spaced-bucket histograms, exported as a plain-JSON
+  snapshot.  No wall-clock or RNG in any metrics path (RA5).
+- **Tracing** (:mod:`repro.obs.trace`): host-side spans around
+  plan / resolve / rebind / apply / flush / admit / drain, exported as
+  Chrome trace-event JSON viewable in Perfetto.
+- **Roofline attribution** (:mod:`repro.obs.roofline`): per-dispatch
+  predicted-vs-measured records driven by the registry's §6 cost
+  model.
+
+Configuration is environment-first: ``REPRO_OBS=on`` enables
+recording (default off — the tier-1 suite runs with every hook on the
+shared null fast path), ``REPRO_OBS_TRACE=PATH`` additionally buffers
+spans for trace export.  Tests and launchers flip the switch
+programmatically via :func:`set_enabled` / :func:`override`.
+
+This package is also the **single sanctioned home for timing**
+(:mod:`repro.obs.timing`); analyzer rule RA502 lint-errors ad-hoc
+``time.perf_counter`` / ``time.time`` / ``timeit`` references
+anywhere else in ``repro.*`` / ``benchmarks.*`` / ``examples.*``
+(``benchmarks/common.py`` is the one exempt shim).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+from repro.obs import metrics, roofline, runtime, timing, trace
+from repro.obs.metrics import zeroed_timings
+from repro.obs.runtime import enabled, override, set_enabled
+from repro.obs.trace import span
+
+__all__ = [
+    "enabled", "set_enabled", "override", "span", "inc", "gauge",
+    "observe", "snapshot", "reset", "write_metrics_json", "write_trace",
+    "zeroed_timings", "timing", "metrics", "roofline", "runtime",
+    "trace",
+]
+
+
+def inc(name: str, delta: int = 1) -> None:
+    """Bump a counter (no-op while obs is disabled)."""
+    if runtime._enabled:
+        metrics.GLOBAL.counter(name).inc(delta)
+
+
+def gauge(name: str, value: float) -> None:
+    """Set a gauge (no-op while obs is disabled)."""
+    if runtime._enabled:
+        metrics.GLOBAL.gauge(name).set(value)
+
+
+def observe(name: str, value: float, unit: str = "seconds") -> None:
+    """Record a histogram observation (no-op while obs is disabled)."""
+    if runtime._enabled:
+        metrics.GLOBAL.histogram(name, unit).observe(value)
+
+
+def snapshot() -> dict:
+    """Full metrics + roofline snapshot as a JSON-clean dict."""
+    snap = metrics.GLOBAL.snapshot()
+    snap["roofline"] = roofline.snapshot()
+    return snap
+
+
+def reset() -> None:
+    """Clear all recorded metrics, spans, and roofline records."""
+    metrics.GLOBAL.reset()
+    roofline.reset()
+    trace.reset()
+
+
+def write_metrics_json(path: str, extra: dict[str, Any] | None = None) -> dict:
+    """Dump :func:`snapshot` (plus optional ``extra`` meta) to ``path``."""
+    snap = snapshot()
+    if extra:
+        snap["meta"] = extra
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return snap
+
+
+def write_trace(path: str | None = None) -> int:
+    """Export buffered spans as Chrome trace JSON; returns event count.
+
+    Defaults to the ``REPRO_OBS_TRACE`` path; no-ops (returns 0) when
+    neither is set.
+    """
+    target = path or runtime.trace_path()
+    if not target:
+        return 0
+    return trace.write_trace(target)

@@ -1,0 +1,97 @@
+"""Cost-model-attributed roofline records.
+
+The registry's §6 cost model predicts memops and flops for every
+candidate plan — but until this module, nothing ever compared those
+predictions against what a dispatch actually did, so a mis-modelled
+backend could win ``method="auto"`` forever without anyone noticing.
+
+Every instrumented dispatch (``SequencePlan.apply`` /
+``apply_batched``) records the resolved problem, chosen backend+tile,
+live-plane count, the model's predicted flops / bytes / seconds
+(computed by :func:`repro.core.registry.cost_components` — the same
+arithmetic the planner ranked candidates with), and the measured wall
+time.  ``model_fraction = predicted_s / measured_s``: ≈1 means the
+model explains the dispatch, ≪1 means the backend is far off its
+modelled roofline (or the model is wrong — either way, worth a look),
+and drift over time is visible in the exported BENCH/OBS artifacts.
+
+Predictions are pure arithmetic on problem shape; only ``measured_s``
+and ``model_fraction`` touch the clock, and :func:`snapshot` mirrors
+the metrics convention so ``metrics.zeroed_timings`` can strip exactly
+those fields for determinism tests.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List
+
+_lock = threading.Lock()
+_records: List[Dict[str, Any]] = []
+
+# keep the per-dispatch list bounded: serving loops can dispatch
+# millions of times, and per-backend aggregates carry the signal
+_MAX_RECORDS = 4096
+
+
+def record_dispatch(*, backend: str, m_total: int, n: int, k: int,
+                    batch: int, dtype: str, tile: Dict[str, Any],
+                    planes_live: int, planes_total: int,
+                    predicted_flops: float, predicted_bytes: float,
+                    predicted_s: float, measured_s: float) -> None:
+    frac = predicted_s / measured_s if measured_s > 0.0 else 0.0
+    rec = {
+        "backend": backend,
+        "m_total": int(m_total),
+        "n": int(n),
+        "k": int(k),
+        "batch": int(batch),
+        "dtype": str(dtype),
+        "tile": dict(tile),
+        "planes_live": int(planes_live),
+        "planes_total": int(planes_total),
+        "predicted_flops": float(predicted_flops),
+        "predicted_bytes": float(predicted_bytes),
+        "predicted_s": float(predicted_s),
+        "measured_s": float(measured_s),
+        "model_fraction": float(frac),
+    }
+    with _lock:
+        if len(_records) < _MAX_RECORDS:
+            _records.append(rec)
+        else:
+            _records.append(rec)
+            del _records[0]
+
+
+def records() -> List[Dict[str, Any]]:
+    with _lock:
+        return [dict(r) for r in _records]
+
+
+def reset() -> None:
+    with _lock:
+        _records.clear()
+
+
+def snapshot() -> dict:
+    """Per-dispatch records + per-backend aggregates, JSON-clean."""
+    recs = records()
+    agg: Dict[str, Dict[str, float]] = {}
+    for r in recs:
+        a = agg.setdefault(r["backend"], {
+            "dispatches": 0, "planes_live": 0, "planes_total": 0,
+            "predicted_flops": 0.0, "predicted_bytes": 0.0,
+            "predicted_s": 0.0, "measured_s": 0.0,
+        })
+        a["dispatches"] += 1
+        a["planes_live"] += r["planes_live"]
+        a["planes_total"] += r["planes_total"]
+        a["predicted_flops"] += r["predicted_flops"]
+        a["predicted_bytes"] += r["predicted_bytes"]
+        a["predicted_s"] += r["predicted_s"]
+        a["measured_s"] += r["measured_s"]
+    for a in agg.values():
+        a["model_fraction"] = (a["predicted_s"] / a["measured_s"]
+                               if a["measured_s"] > 0.0 else 0.0)
+    return {"dispatches": recs,
+            "by_backend": {k: agg[k] for k in sorted(agg)}}

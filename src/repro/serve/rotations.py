@@ -68,6 +68,8 @@ import dataclasses
 import os
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
+
 __all__ = ["RotationService", "BucketKey", "serve_plan_store_path",
            "synthetic_stream"]
 
@@ -146,6 +148,10 @@ class _Pending:
     ticket: int
     seq: "object"   # pad_to/sign-normalized RotationSequence
     A: "object"
+    # admission timestamp (obs.timing.now) — populated only while obs
+    # is enabled, feeding the admit→drain latency histogram; None keeps
+    # the disabled path allocation-identical
+    admit_t: Optional[float] = None
 
 
 class RotationService:
@@ -193,8 +199,12 @@ class RotationService:
         self._warm: Dict[BucketKey, dict] = {}        # serialized, unbound
         self._results: Dict[int, "object"] = {}
         self._next_ticket = 0
+        # "requests" counts *real* admissions only; "slots_executed" is
+        # total batch slots run (real + identity pad) — keeping the two
+        # separate is what stops pad slots inflating req/s accounting
         self.stats = {"requests": 0, "batches": 0, "plans_resolved": 0,
-                      "warm_plans": 0, "padded_slots": 0, "padded_waves": 0}
+                      "warm_plans": 0, "padded_slots": 0, "padded_waves": 0,
+                      "slots_executed": 0}
         if warm_start:
             self._load_store()
 
@@ -244,12 +254,18 @@ class RotationService:
         A = jnp.asarray(A)
         if A.ndim != 2:
             raise ValueError(f"targets must be 2D (m, n); got {A.shape}")
-        key = self._bucket_key(seq, A)
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self.stats["requests"] += 1
-        queue = self._queues.setdefault(key, [])
-        queue.append(_Pending(ticket, self._normalize(seq, key), A))
+        with obs.span("admit"):
+            key = self._bucket_key(seq, A)
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self.stats["requests"] += 1
+            obs.inc("serve.requests")
+            admit_t = obs.timing.now() if obs.enabled() else None
+            queue = self._queues.setdefault(key, [])
+            queue.append(_Pending(ticket, self._normalize(seq, key), A,
+                                  admit_t))
+            obs.gauge("serve.queue_depth",
+                      sum(len(q) for q in self._queues.values()))
         if len(queue) >= self.slots:
             self._drain_bucket(key)
         return ticket
@@ -291,11 +307,14 @@ class RotationService:
                 self.stats["warm_plans"] += 1
             except ValueError:
                 plan = None  # stale entry: fall through to the registry
-        if plan is None:
+        if plan is not None:
+            obs.inc("serve.warm_plans")
+        else:
             plan = rep_seq.plan(like=like, method=self.method,
                                 autotune=self.autotune, batch=self.slots,
                                 **self.plan_kw)
             self.stats["plans_resolved"] += 1
+            obs.inc("serve.plans_resolved")
             self._warm[key] = plan.to_dict()
             self._save_store()
         self._plans[key] = plan
@@ -309,29 +328,50 @@ class RotationService:
         queue = self._queues.get(key, [])
         if not queue:
             return
-        batch, self._queues[key] = queue[: self.slots], queue[self.slots:]
-        seqs = [p.seq for p in batch]
-        targets = [p.A for p in batch]
-        pad = self.slots - len(batch)
-        if pad:  # identity requests keep the jitted shape slot-stable
-            # (implicit-identity signs even in signed buckets: the
-            # stack step broadcasts them, no dense grid per pad slot)
-            self.stats["padded_slots"] += pad
-            ident = RotationSequence.identity(key.n, key.k_pad,
-                                              dtype=seqs[0].dtype)
-            zero = jnp.zeros((key.m, key.n), targets[0].dtype)
-            seqs = seqs + [ident] * pad
-            targets = targets + [zero] * pad
-        A = jnp.stack(targets)
-        # the planning representative carries the bucket's signature: a
-        # signed bucket plans (and warm-binds) on a sign-carrying
-        # sequence even when the first queued request is implicit
-        rep = seqs[0].with_signs() if key.signed else seqs[0]
-        plan = self._bucket_plan(key, rep, A)
-        out = plan.apply_batched(A, sequences=seqs)
-        self.stats["batches"] += 1
-        for i, p in enumerate(batch):  # per-request unpadding
-            self._results[p.ticket] = out[i]
+        with obs.span("drain", m=key.m, n=key.n, k_pad=key.k_pad) as sp:
+            batch, self._queues[key] = (queue[: self.slots],
+                                        queue[self.slots:])
+            seqs = [p.seq for p in batch]
+            targets = [p.A for p in batch]
+            pad = self.slots - len(batch)
+            if pad:  # identity requests keep the jitted shape slot-stable
+                # (implicit-identity signs even in signed buckets: the
+                # stack step broadcasts them, no dense grid per pad slot)
+                self.stats["padded_slots"] += pad
+                ident = RotationSequence.identity(key.n, key.k_pad,
+                                                  dtype=seqs[0].dtype)
+                zero = jnp.zeros((key.m, key.n), targets[0].dtype)
+                seqs = seqs + [ident] * pad
+                targets = targets + [zero] * pad
+            A = jnp.stack(targets)
+            # the planning representative carries the bucket's
+            # signature: a signed bucket plans (and warm-binds) on a
+            # sign-carrying sequence even when the first queued request
+            # is implicit
+            rep = seqs[0].with_signs() if key.signed else seqs[0]
+            plan = self._bucket_plan(key, rep, A)
+            out = plan.apply_batched(A, sequences=seqs)
+            self.stats["batches"] += 1
+            self.stats["slots_executed"] += self.slots
+            sp.set(requests=len(batch), pad_slots=pad)
+            if obs.enabled():
+                obs.inc("serve.batches")
+                obs.inc("serve.slots_executed", self.slots)
+                obs.inc("serve.pad_slots", pad)
+                obs.gauge("serve.bucket_fill_ratio",
+                          len(batch) / self.slots)
+                obs.gauge("serve.pad_slot_fraction",
+                          self.stats["padded_slots"]
+                          / max(1, self.stats["slots_executed"]))
+                done_t = obs.timing.now()
+                for p in batch:
+                    if p.admit_t is not None:
+                        obs.observe("serve.request_latency_seconds",
+                                    done_t - p.admit_t)
+            for i, p in enumerate(batch):  # per-request unpadding
+                self._results[p.ticket] = out[i]
+            obs.gauge("serve.queue_depth",
+                      sum(len(q) for q in self._queues.values()))
         if self._queues[key]:
             self._drain_bucket(key)
 

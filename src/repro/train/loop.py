@@ -15,13 +15,13 @@ Designed for the 1000+-node regime:
 from __future__ import annotations
 
 import statistics
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
 from repro.ckpt.manager import CheckpointManager
+from repro.obs import timing
 
 __all__ = ["StragglerMonitor", "TrainLoop"]
 
@@ -86,11 +86,11 @@ class TrainLoop:
         history: Dict[str, List[float]] = {"loss": [], "time": []}
         for _ in range(num_steps):
             batch = next(self.data_iter)
-            t0 = time.perf_counter()
+            t0 = timing.now()
             self.params, self.opt_state, metrics = self.train_step(
                 self.params, self.opt_state, batch)
             jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            dt = timing.now() - t0
             self.step += 1
             self.monitor.record(self.step, dt)
             history["loss"].append(float(metrics["loss"]))

@@ -1,0 +1,298 @@
+"""repro.obs: metrics primitives, exact dispatch counters, tracing,
+roofline attribution, and the disabled-path bit-identity contract.
+
+The exact-count tests pin the plan-cache counter semantics across the
+cold -> warm -> interpolated -> autotune-upgrade lifecycle; the
+determinism tests pin the acceptance contract that (a) two identical
+runs produce bit-identical snapshots once timing-derived fields are
+zeroed, and (b) disabling obs changes neither outputs nor plan-cache
+contents.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.registry import (clear_plan_cache, plan_cache_stats,
+                                 select_plan)
+from repro.core.rotations import random_sequence
+from repro.serve import RotationService
+from repro.serve.rotations import synthetic_stream
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs.reset()
+    clear_plan_cache()
+    yield
+    obs.reset()
+    clear_plan_cache()
+
+
+# ------------------------------------------------- metrics primitives ----
+
+def test_histogram_buckets_are_a_pure_function_of_the_value():
+    from repro.obs import metrics as m
+    # log-spaced, 10 buckets per decade, anchored at 1e-7
+    assert m.bucket_index(1e-7) == 0
+    assert m.bucket_index(1e-6) == 10
+    assert m.bucket_index(1e-1) == 60
+    # clamped at both ends: zero/negative and absurdly large values
+    assert m.bucket_index(0.0) == 0
+    assert m.bucket_index(-1.0) == 0
+    assert m.bucket_index(1e9) == m.bucket_index(1e12)
+    lo, hi = m.bucket_bounds(m.bucket_index(1e-4))
+    assert lo <= 1e-4 < hi
+
+
+def test_histogram_percentiles_are_geometric_bucket_midpoints():
+    with obs.override(True):
+        for v in (1e-4,) * 9 + (1e-1,):
+            obs.observe("lat", v)
+    h = obs.snapshot()["histograms"]["lat"]
+    assert h["count"] == 10
+    assert h["unit"] == "seconds"
+    assert h["min"] == 1e-4 and h["max"] == 1e-1
+    assert h["p50"] == pytest.approx(1e-4, rel=0.2)
+    assert h["p99"] == pytest.approx(1e-1, rel=0.3)
+
+
+def test_zeroed_timings_zeroes_seconds_histograms_only():
+    with obs.override(True):
+        obs.observe("t", 0.123)                   # timing-derived
+        obs.observe("waves", 7.0, unit="waves")   # deterministic count
+        obs.inc("c", 3)
+    z = obs.zeroed_timings(obs.snapshot())
+    assert z["histograms"]["t"]["count"] == 1     # structure survives
+    assert z["histograms"]["t"]["sum"] == 0.0
+    assert z["histograms"]["t"]["p99"] == 0.0
+    assert z["histograms"]["waves"]["sum"] == 7.0
+    assert z["counters"]["c"] == 3
+
+
+def test_disabled_hooks_record_nothing():
+    with obs.override(False):
+        obs.inc("c")
+        obs.gauge("g", 1.0)
+        obs.observe("h", 0.5)
+    snap = obs.snapshot()
+    assert snap["counters"] == {}
+    assert snap["gauges"] == {}
+    assert snap["histograms"] == {}
+
+
+# ------------------------------------------------------------ tracing ----
+
+def test_span_is_null_without_a_trace_path():
+    with obs.override(True):
+        with obs.span("apply", m=4) as sp:
+            sp.set(method="blocked")
+    assert obs.trace.events() == []
+
+
+def test_trace_exports_perfetto_loadable_chrome_events(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    with obs.override(True):
+        prev = obs.runtime.set_trace_path(path)
+        try:
+            with obs.span("apply", m=4) as sp:
+                sp.set(method="blocked")
+            n = obs.write_trace()
+        finally:
+            obs.runtime.set_trace_path(prev)
+    assert n == 1
+    payload = json.loads(open(path).read())
+    (ev,) = payload["traceEvents"]
+    assert ev["ph"] == "X" and ev["name"] == "apply"
+    assert ev["args"] == {"m": 4, "method": "blocked"}
+    assert ev["dur"] >= 0 and ev["ts"] >= 0
+
+
+# ------------------------------------- plan-cache counters, exactly ----
+
+def test_plan_cache_counters_cold_warm_interpolated_upgrade():
+    with obs.override(True):
+        # cold: one miss, zero hits (autotuned so the entry can donate)
+        donor = select_plan(16, 48, 6, platform="cpu", autotune=True,
+                            autotune_top=1)
+        assert donor.source == "measured"
+        c = obs.snapshot()["counters"]
+        assert c.get("registry.plan_cache.hits", 0) == 0
+        assert c["registry.plan_cache.misses"] == 1
+
+        # warm: exact repeat is a pure hit
+        assert select_plan(16, 48, 6, platform="cpu") == donor
+        c = obs.snapshot()["counters"]
+        assert c["registry.plan_cache.hits"] == 1
+        assert c["registry.plan_cache.misses"] == 1
+
+        # nearby unmeasured shape: counted as miss + interpolated borrow
+        borrowed = select_plan(20, 64, 8, platform="cpu")
+        assert borrowed.source == "interpolated"
+        c = obs.snapshot()["counters"]
+        assert c["registry.plan_cache.misses"] == 2
+        assert c["registry.plan_cache.interpolated"] == 1
+
+        # the borrowed entry is itself warm on repeat
+        assert select_plan(20, 64, 8, platform="cpu") == borrowed
+        c = obs.snapshot()["counters"]
+        assert c["registry.plan_cache.hits"] == 2
+
+        # autotune over a borrowed entry: miss + upgrade, never a hit
+        upgraded = select_plan(20, 64, 8, platform="cpu", autotune=True,
+                               autotune_top=1)
+        assert upgraded.source == "measured"
+        c = obs.snapshot()["counters"]
+        assert c["registry.plan_cache.hits"] == 2
+        assert c["registry.plan_cache.misses"] == 3
+        assert c["registry.plan_cache.autotune_upgrade"] == 1
+        assert c["registry.plan_cache.interpolated"] == 1
+
+
+# ------------------------------------------------- dispatch + roofline ----
+
+def test_sequence_dispatch_records_roofline_and_counters():
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((12, 24)), jnp.float32)
+    Ab = jnp.asarray(rng.standard_normal((3, 12, 24)), jnp.float32)
+    seq = random_sequence(jax.random.key(1), 24, 6)
+    plan = seq.plan(like=A)
+    with obs.override(True):
+        jax.block_until_ready(plan.apply(A))
+        jax.block_until_ready(plan.apply_batched(Ab))
+        snap = obs.snapshot()
+    assert snap["counters"]["sequence.applies"] == 2
+    assert snap["histograms"]["sequence.apply_seconds"]["count"] == 2
+    roof = snap["roofline"]
+    assert len(roof["dispatches"]) == 2
+    for agg in roof["by_backend"].values():
+        assert agg["predicted_flops"] > 0
+        assert agg["predicted_bytes"] > 0
+        assert agg["measured_s"] > 0
+        assert agg["model_fraction"] > 0
+
+
+def test_disabled_obs_outputs_bit_identical_and_no_new_cache_keys():
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((12, 24)), jnp.float32)
+    Ab = jnp.asarray(rng.standard_normal((3, 12, 24)), jnp.float32)
+    seq = random_sequence(jax.random.key(1), 24, 6)
+    plan = seq.plan(like=A)
+    with obs.override(False):
+        off_single = plan.apply(A)
+        off_batched = plan.apply_batched(Ab)
+    size0 = plan_cache_stats()["size"]
+    with obs.override(True):
+        on_single = plan.apply(A)
+        on_batched = plan.apply_batched(Ab)
+    # instrumentation must not add plan-cache keys ...
+    assert plan_cache_stats()["size"] == size0
+    # ... nor change a single bit of the outputs
+    np.testing.assert_array_equal(np.asarray(off_single),
+                                  np.asarray(on_single))
+    np.testing.assert_array_equal(np.asarray(off_batched),
+                                  np.asarray(on_batched))
+
+
+def test_instrumented_apply_stays_differentiable():
+    # the tracer guard: jax.grad drives apply with abstract values, and
+    # the host-side instrumentation must stand aside rather than crash
+    rng = np.random.default_rng(2)
+    A = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    seq = random_sequence(jax.random.key(0), 16, 4)
+    plan = seq.plan(like=A, method="blocked")
+    with obs.override(True):
+        g = jax.grad(lambda a: (plan.apply(a) ** 2).sum())(A)
+        snap = obs.snapshot()
+    assert g.shape == A.shape
+    # the traced inner call records nothing (no concrete wall time)
+    assert snap["roofline"]["dispatches"] == []
+
+
+# --------------------------------------------------- serving + kernels ----
+
+def test_service_metrics_account_pad_slots_and_latency():
+    requests = synthetic_stream(8, seed=3)
+    with obs.override(True):
+        svc = RotationService(slots=4, store=False)
+        outs = svc.apply_many(requests)
+        jax.block_until_ready(outs[-1])
+        snap = obs.snapshot()
+    c = snap["counters"]
+    assert c["serve.requests"] == 8
+    # pad-slot accounting: executed slots split into real vs identity
+    assert c["serve.slots_executed"] == svc.stats["slots_executed"]
+    assert c.get("serve.pad_slots", 0) == svc.stats["padded_slots"]
+    pad_fraction = snap["gauges"]["serve.pad_slot_fraction"]
+    assert 0.0 <= pad_fraction < 1.0
+    lat = snap["histograms"]["serve.request_latency_seconds"]
+    assert lat["count"] == 8
+    assert lat["p99"] >= lat["p50"] > 0
+
+
+def test_service_snapshot_bit_identical_across_runs():
+    def run() -> str:
+        clear_plan_cache()
+        obs.reset()
+        svc = RotationService(slots=4, store=False)
+        outs = svc.apply_many(synthetic_stream(8, seed=3))
+        jax.block_until_ready(outs[-1])
+        return json.dumps(obs.zeroed_timings(obs.snapshot()),
+                          sort_keys=True)
+    with obs.override(True):
+        first = run()
+        second = run()
+    assert first == second
+
+
+def test_fused_kernel_accounting_counts_skipped_planes():
+    from repro.kernels.rotseq_batched.ops import count_live_planes
+    rng = np.random.default_rng(0)
+    b, m, n, k_req, k_pad = 4, 8, 16, 3, 8
+    A = jnp.asarray(rng.standard_normal((b, m, n)), jnp.float32)
+    seqs = [random_sequence(jax.random.key(i), n, k_req).pad_to(k_pad)
+            for i in range(b)]
+    plan = seqs[0].plan(like=A, method="rotseq_batched")
+    with obs.override(True):
+        jax.block_until_ready(plan.apply_batched(A, sequences=seqs))
+        c = obs.snapshot()["counters"]
+    live = sum(count_live_planes(s) for s in seqs)
+    assert c["kernels.rotseq_batched.launches"] == 1
+    assert c["kernels.rotseq_batched.planes_applied"] == live
+    assert c["kernels.rotseq_batched.planes_skipped"] == \
+        (n - 1) * k_pad * b - live
+    assert c["kernels.rotseq_batched.bytes_moved"] > 0
+
+
+def test_eig_flush_waves_histogram():
+    from repro.eig import eigh_givens
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((12, 12)).astype(np.float32)
+    H = jnp.asarray(X + X.T) / 2
+    with obs.override(True):
+        w, V = eigh_givens(H, method="qr", k_delay=4)
+        jax.block_until_ready(V)
+        snap = obs.snapshot()
+    flushes = snap["counters"]["eig.flushes"]
+    h = snap["histograms"]["eig.waves_per_flush"]
+    assert flushes >= 1
+    assert h["unit"] == "waves"
+    assert h["count"] == flushes
+    assert h["max"] <= 4  # the delay bound caps every flush
+
+
+# --------------------------------------------------------- artifacts ----
+
+def test_write_metrics_json_roundtrip(tmp_path):
+    path = str(tmp_path / "OBS_metrics.json")
+    with obs.override(True):
+        obs.inc("x", 2)
+        snap = obs.write_metrics_json(path, extra={"mode": "test"})
+    on_disk = json.loads(open(path).read())
+    assert on_disk == json.loads(json.dumps(snap))
+    assert on_disk["counters"]["x"] == 2
+    assert on_disk["meta"] == {"mode": "test"}
+    assert "roofline" in on_disk

@@ -309,14 +309,26 @@ def test_service_warm_restart_zero_resolutions(tmp_path):
     assert svc.stats["plans_resolved"] == 3
     assert os.path.exists(store)
 
-    # "new process": plan cache cold, service warm from the store
+    # "new process": plan cache cold, service warm from the store.
+    # Resolution counts are asserted through the obs metrics — the same
+    # counters the OBS_metrics.json artifact exports — not by poking
+    # service internals.
+    from repro import obs
+
     clear_plan_cache()
     misses0 = plan_cache_stats()["misses"]
     warm = RotationService(slots=8, store=store)
-    outs2 = warm.apply_many(requests)
+    with obs.override(True):
+        obs.reset()
+        outs2 = warm.apply_many(requests)
+        counters = obs.snapshot()["counters"]
+    assert counters.get("serve.plans_resolved", 0) == 0
+    assert counters.get("serve.warm_plans", 0) == 3
+    assert counters.get("registry.plan_cache.misses", 0) == 0
     assert warm.stats["plans_resolved"] == 0
     assert warm.stats["warm_plans"] == 3
     assert plan_cache_stats()["misses"] == misses0
+    obs.reset()
     for a, b in zip(outs, outs2):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     clear_plan_cache()
