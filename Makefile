@@ -81,11 +81,17 @@ bench-compare:
 		--baseline benchmarks/baselines/bench_baseline.json \
 		BENCH_smoke.json BENCH_eig.json BENCH_serve.json
 
-# Observability report: one obs-enabled rotation-serving run writing the
+# Observability report: obs-enabled rotation-serving runs writing the
 # metrics + roofline snapshot (OBS_metrics.json) and a Perfetto-loadable
-# Chrome trace (trace.jsonl — load at ui.perfetto.dev).  See the
-# README "Observability" section for the metric catalogue.
+# Chrome trace (trace.jsonl — load at ui.perfetto.dev), once through the
+# synchronous service and once through the streaming engine
+# (OBS_stream_metrics.json / trace_stream.jsonl, bit-checked against the
+# synchronous drain).  See the README "Observability" section for the
+# metric catalogue.
 obs-report:
 	PYTHONPATH=src python -m repro.launch.serve --rotations \
 		--requests 24 --slots 8 --check \
 		--metrics-json OBS_metrics.json --trace trace.jsonl
+	PYTHONPATH=src python -m repro.launch.serve --rotations --stream \
+		--requests 24 --slots 8 --check \
+		--metrics-json OBS_stream_metrics.json --trace trace_stream.jsonl

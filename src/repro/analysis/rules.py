@@ -305,6 +305,91 @@ class RA203TypedLayerOnly(Rule):
                                f"use RotationSequence/SequencePlan only")
 
 
+class RA204StreamConcurrencyDiscipline(Rule):
+    """Concurrency primitives outside the stream engine; engine reaching
+    below the service.
+
+    Incident: the first streaming-engine draft grew a second ad-hoc
+    worker thread inside the launcher and called
+    ``SequencePlan.apply_batched`` straight from it — the two dispatch
+    paths then raced the (pre-lock) obs counters and double-resolved a
+    bucket plan, breaking the exactly-once planning invariant that the
+    warm-start tests pin.  Two confinements, statically:
+
+    * thread/queue primitives (``threading``, ``queue``,
+      ``concurrent.futures``, ``_thread``, ``multiprocessing``) live
+      only in ``repro.serve.stream`` — the serving stack's one
+      concurrent component.  Carve-outs for the pre-existing
+      infrastructure users: ``repro.obs.*`` (metric/trace/roofline
+      locks), ``repro.ckpt.manager`` (async checkpoint writer), and
+      ``repro.parallel.sharding`` (a ``threading.local`` for axis-rule
+      scoping).
+    * ``repro.serve.stream`` itself executes only through
+      ``RotationService`` bucket internals /
+      ``SequencePlan.apply_batched`` handles — importing
+      ``repro.core.*`` or ``repro.kernels.*`` machinery from the engine
+      would open a second dispatch path next to the service's
+      plan-exactly-once state.
+    """
+
+    id = "RA204"
+    title = "thread/queue primitive outside serve.stream, or engine " \
+            "bypassing the service"
+
+    THREAD_ROOTS = ("threading", "queue", "concurrent.futures", "_thread",
+                    "multiprocessing")
+    ENGINE = "repro.serve.stream"
+    CARVE_OUTS = ("repro.obs", "repro.ckpt.manager",
+                  "repro.parallel.sharding")
+    ENGINE_BANNED_PREFIXES = ("repro.core", "repro.kernels")
+
+    def _thread_primitive(self, dotted: str) -> Optional[str]:
+        for root in self.THREAD_ROOTS:
+            if dotted == root or dotted.startswith(root + "."):
+                return root
+        return None
+
+    def _carved_out(self, mi: ModuleInfo) -> bool:
+        return any(mi.module == c or mi.module.startswith(c + ".")
+                   for c in self.CARVE_OUTS)
+
+    def check(self, mi: ModuleInfo) -> Iterable[Violation]:
+        if not _in_repro(mi):
+            return
+        if mi.module == self.ENGINE:
+            # inside the engine: concurrency is fine, core/kernels are not
+            for line, target in mi.import_targets:
+                if any(target == p or target.startswith(p + ".")
+                       for p in self.ENGINE_BANNED_PREFIXES):
+                    yield Violation(
+                        self.id, mi.logical, line,
+                        f"stream engine import '{target}'; execute only "
+                        f"through RotationService/SequencePlan handles")
+            return
+        if self._carved_out(mi):
+            return
+        imported_roots = {t.split(".")[0] for _l, t in mi.import_targets}
+        for line, target in mi.import_targets:
+            root = self._thread_primitive(target)
+            if root:
+                yield Violation(
+                    self.id, mi.logical, line,
+                    f"thread/queue primitive '{root}' outside "
+                    f"repro.serve.stream; the stream engine is the one "
+                    f"concurrent serving component")
+        for node, dotted in mi.references():
+            root = self._thread_primitive(dotted)
+            # a local variable that happens to be named `queue` yields
+            # dotted chains like "queue.append" — only flag chains whose
+            # root module is actually imported here
+            if root and dotted.split(".")[0] in imported_roots:
+                yield self.hit(
+                    mi, node,
+                    f"thread/queue reference '{dotted}' outside "
+                    f"repro.serve.stream; the stream engine is the one "
+                    f"concurrent serving component")
+
+
 # --------------------------------------------------------------------------
 # RA3xx — bitwise contract
 # --------------------------------------------------------------------------
@@ -823,6 +908,7 @@ ALL_RULES: Tuple[type, ...] = (
     RA201RawApplyOutsideApi,
     RA202KernelImportOutsideRegistry,
     RA203TypedLayerOnly,
+    RA204StreamConcurrencyDiscipline,
     RA301InlinePlaneStencil,
     RA302FoldableSignLiteral,
     RA401KernelHostRoundTrip,

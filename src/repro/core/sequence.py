@@ -52,6 +52,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat, obs
 from repro.core import registry
@@ -633,10 +634,7 @@ class SequencePlan:
                     "mixed sign/reflect structure in one batch; plan the "
                     "bucket on a sign-carrying representative (or "
                     "normalize with RotationSequence.with_signs()) first")
-        C = jnp.stack([s.cos for s in seqs])
-        S = jnp.stack([s.sin for s in seqs])
-        G = None if not plan_signed \
-            else jnp.stack([s._sign_array() for s in seqs])
+        C, S, G = _stack_waves(seqs, plan_signed)
         if cap.batch_via == "fused":
             return run_fused(self.method, self.kwargs, seq.reflect,
                              A, C, S, G)
@@ -832,6 +830,33 @@ def _transpose_waves(cos, sin, sign, reflect: bool):
         g_t = jnp.where(valid, jnp.asarray(_REFL, cos.dtype),
                         jnp.asarray(_ROT, cos.dtype))
     return c_t, s_t, g_t, (False if g_t is not None else reflect)
+
+
+def _stack_waves(seqs, plan_signed: bool):
+    """Stack per-request waves into ``(b, planes, k)`` batch arrays.
+
+    On the concrete (serving) path the stack happens in **numpy** — one
+    memcpy per array instead of one traced ``jnp.stack`` op over ``b``
+    operands, which dominates the per-batch host time at serving batch
+    sizes.  The bytes are identical either way (stacking reorders
+    storage, never values), so the streamed-vs-synchronous bitwise
+    contract is untouched; the batch arrays convert to device buffers
+    once at the backend call boundary.  Traced leaves (a transformed
+    caller) keep the ``jnp.stack`` path.
+    """
+    leaves = [x for s in seqs for x in (s.cos, s.sin, s.sign)
+              if x is not None]
+    if any(compat.is_tracer(x) for x in leaves):
+        C = jnp.stack([s.cos for s in seqs])
+        S = jnp.stack([s.sin for s in seqs])
+        G = None if not plan_signed \
+            else jnp.stack([s._sign_array() for s in seqs])
+        return C, S, G
+    C = np.stack([np.asarray(s.cos) for s in seqs])
+    S = np.stack([np.asarray(s.sin) for s in seqs])
+    G = None if not plan_signed \
+        else np.stack([np.asarray(s._sign_array()) for s in seqs])
+    return C, S, G
 
 
 def _run_backend(method: str, kwargs: Tuple[Tuple[str, Any], ...],

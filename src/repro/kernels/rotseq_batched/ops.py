@@ -12,6 +12,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat, obs
 from repro.kernels.limits import clamp_m_blk, round_up
@@ -91,7 +92,8 @@ def rot_sequence_batched(A, C, S, *, reflect: bool = False, G=None,
     applied vs skipped, modeled bytes moved) around the jitted core —
     a no-op while obs is off or under tracing.
     """
-    if obs.enabled() and not compat.is_tracer(A):
+    if obs.enabled() and not any(
+            compat.is_tracer(x) for x in (A, C, S, G) if x is not None):
         _record_launch(A, C, S, G, reflect)
     return _rot_sequence_batched_jit(
         A, C, S, reflect=reflect, G=G, m_blk=m_blk, interpret=interpret,
@@ -99,17 +101,29 @@ def rot_sequence_batched(A, C, S, *, reflect: bool = False, G=None,
 
 
 def _record_launch(A, C, S, G, reflect: bool) -> None:
+    # accounting runs on every obs-enabled launch of the serving hot
+    # path, so the liveness hull is computed host-side in numpy: the
+    # jnp formulation dispatches a dozen traced ops and syncs on
+    # ``counts.sum()``, which costs more than the kernel itself at
+    # serving batch sizes.  Same boolean rule as :func:`wave_windows`.
     b = int(A.shape[0]) if A.ndim == 3 else 1
-    Cb = jnp.asarray(C)
+    Cb = np.asarray(C)
     if Cb.ndim == 2:
         Cb = Cb[None]
-    Sb = jnp.asarray(S).reshape(Cb.shape)
+    Sb = np.asarray(S).reshape(Cb.shape)
     if G is None:
-        Gb = jnp.full(Cb.shape, 1.0 if reflect else -1.0, Cb.dtype)
+        # reflect: g = +1 everywhere, so no plane passes the identity
+        # test; plain: g = -1 everywhere, the test reduces to cos/sin
+        live = np.ones(Cb.shape, bool) if reflect \
+            else (Cb != 1) | (Sb != 0)
     else:
-        Gb = jnp.asarray(G).reshape(Cb.shape)
+        Gb = np.asarray(G).reshape(Cb.shape)
+        live = ~((Cb == 1) & (Sb == 0) & (Gb < 0))
     bs, J, K = Cb.shape
-    _, counts = wave_windows(Cb, Sb, Gb)
+    any_live = live.any(axis=1)                       # (bs, K)
+    first = live.argmax(axis=1)
+    last = J - 1 - live[:, ::-1, :].argmax(axis=1)
+    counts = np.where(any_live, last - first + 1, 0)
     # hull planes each target actually executes; shared waves (bs=1)
     # replay the same windows on every target
     applied = int(counts.sum()) * (b // bs)

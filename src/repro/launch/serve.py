@@ -13,12 +13,22 @@ per-request application, and timed::
   PYTHONPATH=src python -m repro.launch.serve --rotations \
       --requests 64 --slots 8
 
+Stream mode drives the async continuous-batching engine
+(:class:`repro.serve.StreamEngine`) over the same synthetic stream:
+requests are submitted as tickets, batches close on the size-or-age
+policy, and results are checked bit-for-bit against the synchronous
+service::
+
+  PYTHONPATH=src python -m repro.launch.serve --rotations --stream \
+      --requests 64 --slots 8
+
 With ``--metrics-json PATH`` the run executes with ``repro.obs``
 enabled and writes the full metrics + roofline snapshot (plan-cache
 counters, admit→drain latency histogram p50/p99, per-backend
 model-vs-measured fractions) to ``PATH``; ``--trace PATH`` additionally
 exports a Perfetto-loadable Chrome trace of the plan / admit / drain /
-apply spans.  ``make obs-report`` packages the canonical invocation.
+apply spans.  ``make obs-report`` packages the canonical invocations
+(synchronous and streaming, each with its own artifact pair).
 """
 from __future__ import annotations
 
@@ -104,11 +114,62 @@ def _run_rotations(args) -> None:
         print(f"trace -> {args.trace} ({n_ev} events)")
 
 
+def _run_stream(args) -> None:
+    import numpy as np
+
+    from repro.serve import StreamEngine
+
+    requests = synthetic_stream_for(args)
+    with StreamEngine(slots=args.slots, autotune=args.autotune) as eng:
+        t0 = obs.timing.now()
+        tickets = [eng.submit(seq, A) for seq, A in requests]
+        outs = [t.result(timeout=600.0) for t in tickets]
+        dt = obs.timing.now() - t0
+    # context exit drains: every ticket is fulfilled here
+    if args.check:
+        from repro.serve import RotationService
+
+        refs = RotationService(slots=args.slots).apply_many(requests)
+        for ref, out in zip(refs, outs):
+            if not np.array_equal(np.asarray(ref), np.asarray(out)):
+                raise AssertionError(
+                    "streamed result diverged from synchronous drain")
+        print("check: streamed results bit-equal to synchronous drains")
+
+    s = eng.stats
+    print(f"{s['completed']} requests in {dt*1e3:.1f} ms "
+          f"({s['completed']/dt:.0f} req/s streamed; closes: "
+          f"size={s['closes_size']} age={s['closes_age']} "
+          f"drain={s['closes_drain']}; shed={s['shed']})")
+
+    if args.metrics_json:
+        snap = obs.write_metrics_json(
+            args.metrics_json,
+            extra={"mode": "stream", "requests": s["completed"],
+                   "slots": args.slots, "seconds": dt})
+        lat = snap["histograms"].get("serve.request_latency_seconds", {})
+        print(f"metrics -> {args.metrics_json} "
+              f"(latency p50={lat.get('p50', 0)*1e3:.2f} ms "
+              f"p99={lat.get('p99', 0)*1e3:.2f} ms)")
+    if args.trace:
+        n_ev = obs.write_trace(args.trace)
+        print(f"trace -> {args.trace} ({n_ev} events)")
+
+
+def synthetic_stream_for(args):
+    from repro.serve.rotations import synthetic_stream
+
+    return synthetic_stream(args.requests, seed=args.seed)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rotations", action="store_true",
                     help="serve rotation-application requests instead of "
                          "LM decoding")
+    ap.add_argument("--stream", action="store_true",
+                    help="rotation mode: drive the async StreamEngine "
+                         "instead of the synchronous service")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -137,7 +198,10 @@ def main():
             obs.runtime.set_trace_path(args.trace)
 
     if args.rotations:
-        _run_rotations(args)
+        if args.stream:
+            _run_stream(args)
+        else:
+            _run_rotations(args)
         return
     if args.arch is None:
         ap.error("--arch is required unless --rotations is given")

@@ -26,7 +26,7 @@ from __future__ import annotations
 import json
 import math
 import threading
-from typing import Dict, Iterable
+from typing import Dict, Iterable, Optional
 
 # Histogram bucket i covers [_BASE * 10**(i/_PER_DECADE),
 # _BASE * 10**((i+1)/_PER_DECADE)).  _BASE=1e-7 s puts sub-100ns
@@ -52,34 +52,54 @@ def bucket_bounds(i: int) -> tuple[float, float]:
 
 
 class Counter:
-    __slots__ = ("name", "value")
+    """Thread-safe monotonic counter.
 
-    def __init__(self, name: str):
+    Metrics are mutated concurrently — the stream engine's scheduler
+    and dispatcher threads and the caller's thread all increment
+    serving counters — so every mutator serializes on a lock
+    (registry-shared when created through :class:`MetricsRegistry`, so
+    snapshots are consistent cuts).  ``value += delta`` without it is a
+    load/add/store race that silently drops increments.
+    """
+
+    __slots__ = ("name", "value", "_lock")
+
+    def __init__(self, name: str, lock: Optional[threading.Lock] = None):
         self.name = name
         self.value = 0
+        self._lock = lock if lock is not None else threading.Lock()
 
     def inc(self, delta: int = 1) -> None:
-        self.value += delta
+        with self._lock:
+            self.value += delta
 
 
 class Gauge:
-    __slots__ = ("name", "value")
+    __slots__ = ("name", "value", "_lock")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, lock: Optional[threading.Lock] = None):
         self.name = name
         self.value = 0.0
+        self._lock = lock if lock is not None else threading.Lock()
 
     def set(self, value: float) -> None:
-        self.value = float(value)
+        v = float(value)  # coerce outside the lock: may raise
+        with self._lock:
+            self.value = v
 
 
 class Histogram:
     """Log-spaced-bucket histogram; ``unit="seconds"`` marks fields as
-    timing-derived for :func:`zeroed_timings`."""
+    timing-derived for :func:`zeroed_timings`.  ``observe`` mutates
+    five fields together, so concurrent observers serialize on the
+    (registry-shared) lock to keep count/sum/buckets mutually
+    consistent."""
 
-    __slots__ = ("name", "unit", "count", "sum", "min", "max", "buckets")
+    __slots__ = ("name", "unit", "count", "sum", "min", "max", "buckets",
+                 "_lock")
 
-    def __init__(self, name: str, unit: str = "seconds"):
+    def __init__(self, name: str, unit: str = "seconds",
+                 lock: Optional[threading.Lock] = None):
         self.name = name
         self.unit = unit
         self.count = 0
@@ -87,17 +107,19 @@ class Histogram:
         self.min = math.inf
         self.max = -math.inf
         self.buckets: Dict[int, int] = {}
+        self._lock = lock if lock is not None else threading.Lock()
 
     def observe(self, value: float) -> None:
         v = float(value)
-        self.count += 1
-        self.sum += v
-        if v < self.min:
-            self.min = v
-        if v > self.max:
-            self.max = v
         i = bucket_index(v)
-        self.buckets[i] = self.buckets.get(i, 0) + 1
+        with self._lock:
+            self.count += 1
+            self.sum += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
+            self.buckets[i] = self.buckets.get(i, 0) + 1
 
     def percentile(self, q: float) -> float:
         """Percentile estimate from the cumulative bucket counts:
@@ -116,8 +138,9 @@ class Histogram:
 
 
 class MetricsRegistry:
-    """Process-global named metrics; thread-safe creation, plain-dict
-    snapshot export."""
+    """Process-global named metrics; thread-safe creation *and*
+    mutation (every metric shares the registry lock, so a snapshot is
+    a consistent cut across all metrics), plain-dict snapshot export."""
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -129,21 +152,23 @@ class MetricsRegistry:
         c = self._counters.get(name)
         if c is None:
             with self._lock:
-                c = self._counters.setdefault(name, Counter(name))
+                c = self._counters.setdefault(name,
+                                              Counter(name, self._lock))
         return c
 
     def gauge(self, name: str) -> Gauge:
         g = self._gauges.get(name)
         if g is None:
             with self._lock:
-                g = self._gauges.setdefault(name, Gauge(name))
+                g = self._gauges.setdefault(name, Gauge(name, self._lock))
         return g
 
     def histogram(self, name: str, unit: str = "seconds") -> Histogram:
         h = self._histograms.get(name)
         if h is None:
             with self._lock:
-                h = self._histograms.setdefault(name, Histogram(name, unit))
+                h = self._histograms.setdefault(
+                    name, Histogram(name, unit, self._lock))
         return h
 
     def reset(self) -> None:

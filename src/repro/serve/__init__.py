@@ -1,5 +1,8 @@
-from .engine import ServeEngine
+from .lm import ServeEngine
 from .rotations import BucketKey, RotationService, serve_plan_store_path
+from .stream import (Backpressure, DeadlineExceeded, EngineClosed,
+                     StreamEngine, StreamTicket)
 
-__all__ = ["ServeEngine", "RotationService", "BucketKey",
-           "serve_plan_store_path"]
+__all__ = ["RotationService", "BucketKey", "serve_plan_store_path",
+           "StreamEngine", "StreamTicket", "Backpressure",
+           "DeadlineExceeded", "EngineClosed", "ServeEngine"]

@@ -1,4 +1,8 @@
-"""Batched serving engine: continuous-batching-lite.
+"""Batched LM decoding: fixed-slot greedy generation.
+
+(Relocated from ``repro.serve.engine`` — the ``serve.engine`` seed was
+rewritten as the rotation streaming engine, :mod:`repro.serve.stream`;
+this module keeps the unrelated token-decode workload.)
 
 Requests (prompt token lists) are admitted into a fixed-size batch of
 decode slots; each slot tracks its own cache index via per-slot masking.

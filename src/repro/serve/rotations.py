@@ -8,8 +8,10 @@ Dumitriu make the system-scale version of this point for eigenproblems:
 batching independent instances through one communication schedule is how
 you approach the machine's bandwidth lower bound.
 
-:class:`RotationService` is the serving-shaped realization, modeled on
-:class:`~repro.serve.engine.ServeEngine`'s slot design:
+:class:`RotationService` is the serving-shaped realization (the async
+continuous-batching engine in :mod:`repro.serve.stream` layers request
+queues, deadlines, and double-buffered dispatch on top of the same
+buckets):
 
 * **shape-bucketed admission** — ``submit(seq, A)`` drops each request
   into a bucket keyed by ``(m, n, dtype, k_pad, signed)``.  Wave counts
@@ -68,6 +70,8 @@ import dataclasses
 import os
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro import obs
 
 __all__ = ["RotationService", "BucketKey", "serve_plan_store_path",
@@ -117,6 +121,18 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, (max(1, x) - 1).bit_length())
 
 
+# ``str(dtype)`` walks numpy's dtype-name machinery — measurable on the
+# per-request admission path, so bucket keys use a memoized lookup
+_DTYPE_NAMES: Dict = {}
+
+
+def _dtype_name(dt) -> str:
+    name = _DTYPE_NAMES.get(dt)
+    if name is None:
+        name = _DTYPE_NAMES[dt] = str(dt)
+    return name
+
+
 @dataclasses.dataclass(frozen=True)
 class BucketKey:
     """Shape/dtype class of one admission bucket.
@@ -159,7 +175,7 @@ class RotationService:
 
     Args:
       slots: per-bucket batch capacity.  Admission auto-drains a bucket
-        the moment it fills (``ServeEngine``-style slots); partial
+        the moment it fills (fixed-slot semantics); partial
         drains are padded to ``slots`` with identity requests so the
         batched computation keeps one stable shape.
       method: dispatch method for bucket plans (``"auto"`` prices the
@@ -224,9 +240,9 @@ class RotationService:
         k_pad = max(self.min_k_pad, _next_pow2(seq.k)) if self.pad_waves \
             else seq.k
         signed = seq.sign is not None or bool(seq.reflect)
-        return BucketKey(m=int(m), n=int(n), dtype=str(A.dtype),
+        return BucketKey(m=int(m), n=int(n), dtype=_dtype_name(A.dtype),
                          k_pad=int(k_pad), signed=signed,
-                         wave_dtype=str(seq.dtype))
+                         wave_dtype=_dtype_name(seq.dtype))
 
     def _normalize(self, seq, key: BucketKey):
         """pad_to the bucket wave count; sign structure stays implicit.
@@ -240,8 +256,40 @@ class RotationService:
         """
         if seq.k < key.k_pad:
             self.stats["padded_waves"] += key.k_pad - seq.k
-            seq = seq.pad_to(key.k_pad)
+            seq = self._pad_concrete(seq, key.k_pad)
         return seq
+
+    @staticmethod
+    def _pad_concrete(seq, k_target: int):
+        """Host-side identity padding for concrete unsigned sequences.
+
+        ``pad_to`` issues traced concatenations per request — at serving
+        volume (every admitted request of a padded bucket) that per-op
+        dispatch dominates the batch period, so plain concrete
+        sequences pad in numpy instead: identity waves are exact
+        constants (``cos=1.0``, ``sin=0.0``), so the padded bytes are
+        identical to ``pad_to``'s and the streamed-vs-sync bitwise
+        contract is untouched.  Sign-carrying / reflector / traced
+        sequences keep the canonical ``pad_to`` path (reflector padding
+        must materialize a sign grid — see ``pad_to``).
+        """
+        from repro.core.sequence import RotationSequence
+
+        from repro.compat import is_tracer
+
+        if (seq.sign is not None or seq.reflect
+                or is_tracer(seq.cos) or is_tracer(seq.sin)):
+            return seq.pad_to(k_target)
+        pad = k_target - seq.k
+        planes = seq.cos.shape[0]
+        live = seq.k_live if seq.k_live is not None else planes * seq.k
+        cos = np.asarray(seq.cos)
+        sin = np.asarray(seq.sin)
+        cos = np.concatenate(
+            [cos, np.ones((planes, pad), cos.dtype)], axis=1)
+        sin = np.concatenate(
+            [sin, np.zeros((planes, pad), sin.dtype)], axis=1)
+        return RotationSequence(cos, sin, None, False, k_live=live)
 
     def submit(self, seq, A) -> int:
         """Admit one request; returns a ticket for :meth:`result`.
@@ -320,49 +368,97 @@ class RotationService:
         self._plans[key] = plan
         return plan
 
-    def _drain_bucket(self, key: BucketKey) -> None:
+    def assemble_batch(self, key: BucketKey, seqs: list, targets: list):
+        """Stack one bucket batch into the plan-cache-stable shape.
+
+        Slot-pads ``seqs``/``targets`` (already ``_normalize``-d to the
+        bucket's ``k_pad``) to ``self.slots`` with identity requests
+        (zero targets, identity waves — implicit-identity signs even in
+        signed buckets: the stack step broadcasts them, no dense grid
+        per pad slot) and picks the planning representative.  Returns
+        ``(seqs, A, rep, pad)`` where ``A`` is the ``(slots, m, n)``
+        target stack.  Shared verbatim by the synchronous drain and the
+        :mod:`repro.serve.stream` dispatcher — running one code path is
+        what makes streamed results bit-equal to synchronous drains.
+        """
         import jax.numpy as jnp
 
         from repro.core.sequence import RotationSequence
 
+        if not seqs or len(seqs) > self.slots:
+            raise ValueError(
+                f"batch of {len(seqs)} requests for slots={self.slots}")
+        pad = self.slots - len(seqs)
+        if pad:  # identity requests keep the jitted shape slot-stable
+            self.stats["padded_slots"] += pad
+            ident = RotationSequence.identity(key.n, key.k_pad,
+                                              dtype=seqs[0].dtype)
+            zero = jnp.zeros((key.m, key.n), targets[0].dtype)
+            seqs = seqs + [ident] * pad
+            targets = targets + [zero] * pad
+        # concrete targets stack host-side (one memcpy; same bytes) —
+        # a traced jnp.stack over ``slots`` operands costs milliseconds
+        # of pure dispatch at serving batch sizes
+        from repro.compat import is_tracer
+        if any(is_tracer(t) for t in targets):
+            A = jnp.stack(targets)
+        else:
+            A = np.stack([np.asarray(t) for t in targets])
+        # the planning representative carries the bucket's signature: a
+        # signed bucket plans (and warm-binds) on a sign-carrying
+        # sequence even when the first queued request is implicit
+        rep = seqs[0].with_signs() if key.signed else seqs[0]
+        return seqs, A, rep, pad
+
+    def execute_batch(self, key: BucketKey, seqs: list, targets: list):
+        """Plan (exactly once per bucket) and run one assembled batch.
+
+        Returns ``(out, pad)`` — ``out`` is the ``(slots, m, n)`` result
+        stack (slice ``out[i]`` per request; pad slots are garbage) and
+        ``pad`` the identity-slot count.  Does *not* block on the device
+        result: ``out`` is an asynchronously-dispatched value, which is
+        what lets the stream dispatcher overlap the next batch's
+        assembly with this batch's device execution.
+        """
+        n_live = len(seqs)
+        seqs, A, rep, pad = self.assemble_batch(key, seqs, targets)
+        plan = self._bucket_plan(key, rep, A)
+        out = plan.apply_batched(A, sequences=seqs)
+        self.stats["batches"] += 1
+        self.stats["slots_executed"] += self.slots
+        if obs.enabled():
+            obs.inc("serve.batches")
+            obs.inc("serve.slots_executed", self.slots)
+            obs.inc("serve.pad_slots", pad)
+            obs.gauge("serve.bucket_fill_ratio", n_live / self.slots)
+            obs.gauge("serve.pad_slot_fraction",
+                      self.stats["padded_slots"]
+                      / max(1, self.stats["slots_executed"]))
+        return out, pad
+
+    def bucket_plan_estimate(self, key: BucketKey) -> Optional[float]:
+        """§6-modeled seconds for one batched drain of ``key``'s bucket.
+
+        ``None`` until the bucket has been planned (the stream engine's
+        age-based close policy falls back to its floor target then).
+        """
+        plan = self._plans.get(key)
+        if plan is None or plan.plan is None:
+            return None
+        est = float(plan.plan.est_seconds)
+        return est if est > 0 else None
+
+    def _drain_bucket(self, key: BucketKey) -> None:
         queue = self._queues.get(key, [])
         if not queue:
             return
         with obs.span("drain", m=key.m, n=key.n, k_pad=key.k_pad) as sp:
             batch, self._queues[key] = (queue[: self.slots],
                                         queue[self.slots:])
-            seqs = [p.seq for p in batch]
-            targets = [p.A for p in batch]
-            pad = self.slots - len(batch)
-            if pad:  # identity requests keep the jitted shape slot-stable
-                # (implicit-identity signs even in signed buckets: the
-                # stack step broadcasts them, no dense grid per pad slot)
-                self.stats["padded_slots"] += pad
-                ident = RotationSequence.identity(key.n, key.k_pad,
-                                                  dtype=seqs[0].dtype)
-                zero = jnp.zeros((key.m, key.n), targets[0].dtype)
-                seqs = seqs + [ident] * pad
-                targets = targets + [zero] * pad
-            A = jnp.stack(targets)
-            # the planning representative carries the bucket's
-            # signature: a signed bucket plans (and warm-binds) on a
-            # sign-carrying sequence even when the first queued request
-            # is implicit
-            rep = seqs[0].with_signs() if key.signed else seqs[0]
-            plan = self._bucket_plan(key, rep, A)
-            out = plan.apply_batched(A, sequences=seqs)
-            self.stats["batches"] += 1
-            self.stats["slots_executed"] += self.slots
+            out, pad = self.execute_batch(key, [p.seq for p in batch],
+                                          [p.A for p in batch])
             sp.set(requests=len(batch), pad_slots=pad)
             if obs.enabled():
-                obs.inc("serve.batches")
-                obs.inc("serve.slots_executed", self.slots)
-                obs.inc("serve.pad_slots", pad)
-                obs.gauge("serve.bucket_fill_ratio",
-                          len(batch) / self.slots)
-                obs.gauge("serve.pad_slot_fraction",
-                          self.stats["padded_slots"]
-                          / max(1, self.stats["slots_executed"]))
                 done_t = obs.timing.now()
                 for p in batch:
                     if p.admit_t is not None:

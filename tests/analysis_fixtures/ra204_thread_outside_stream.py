@@ -1,0 +1,31 @@
+# repro-lint: fixture-as=src/repro/serve/bad_worker.py
+"""RA204 fixture: concurrency primitives sprouting outside the engine.
+
+A second worker thread next to ``repro.serve.stream`` races the
+engine's exactly-once bucket planning and the obs counters; the stream
+engine is the serving stack's one concurrent component.
+"""
+import threading  # expect: RA204
+from queue import Queue  # expect: RA204
+from concurrent.futures import ThreadPoolExecutor  # expect: RA204
+
+
+def bad_background_drain(svc, key):
+    jobs = Queue()  # expect: RA204
+
+    def worker():
+        while True:
+            batch = jobs.get()
+            if batch is None:
+                return
+            svc.execute_batch(key, *batch)
+
+    t = threading.Thread(target=worker, daemon=True)  # expect: RA204
+    t.start()
+    return jobs, t
+
+
+def bad_pool_drain(svc, key, batches):
+    with ThreadPoolExecutor(max_workers=4) as pool:  # expect: RA204
+        return list(pool.map(
+            lambda b: svc.execute_batch(key, *b), batches))

@@ -296,3 +296,35 @@ def test_write_metrics_json_roundtrip(tmp_path):
     assert on_disk["counters"]["x"] == 2
     assert on_disk["meta"] == {"mode": "test"}
     assert "roofline" in on_disk
+
+
+# ------------------------------------------------------ thread safety ----
+
+def test_metrics_are_thread_safe_under_contention():
+    """The stream engine mutates counters/histograms from three threads
+    (caller, scheduler, dispatcher).  N threads hammering the same
+    metrics must lose zero increments and keep histogram count/sum
+    consistent — ``value += d`` without the registry lock drops both."""
+    import threading
+
+    n_threads, per_thread = 8, 2000
+    with obs.override(True):
+        def work():
+            for i in range(per_thread):
+                obs.inc("ts.counter")
+                obs.observe("ts.hist", 1e-3)
+                obs.gauge("ts.gauge", i)
+
+        threads = [threading.Thread(target=work) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        snap = obs.snapshot()
+    total = n_threads * per_thread
+    assert snap["counters"]["ts.counter"] == total
+    h = snap["histograms"]["ts.hist"]
+    assert h["count"] == total
+    assert h["sum"] == pytest.approx(total * 1e-3)
+    assert sum(h["buckets"].values()) == total
+    assert snap["gauges"]["ts.gauge"] == per_thread - 1
