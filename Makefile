@@ -10,12 +10,18 @@
 # `python -m repro.analysis --list-rules`.  The old gate targets remain
 # below as thin aliases for one release.
 
-.PHONY: check lint analyze ruff test compat-gate eig-gate seq-gate \
-	serve-gate smoke bench bench-artifacts bench-compare obs-report
+.PHONY: check lint analyze ruff docs-check test compat-gate eig-gate \
+	seq-gate serve-gate smoke bench bench-artifacts bench-compare \
+	obs-report
 
 check: lint test
 
-lint: analyze ruff
+lint: analyze ruff docs-check
+
+# Dead relative links in docs/*.md + README.md.  Stdlib-only on
+# purpose: the CI lint job installs no project dependencies.
+docs-check:
+	python tools/check_docs.py .
 
 # Mtime-cached AST walk (REPRO_LINT_CACHE=off disables); exits 1 on any
 # non-baselined violation.

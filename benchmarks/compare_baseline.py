@@ -90,6 +90,21 @@ SPEC = {
     # the relative band fails.
     "serve/fused_vs_vmap:speedup": dict(higher_is_better=True,
                                         rel_tol=0.50, abs_floor=1.5),
+    # measured-auto vs the old hand-pinned rotseq_batched plan on the
+    # per-request acceptance bucket.  Gating: the serving-aware cost
+    # model (per-request pricing + autotune arbitration) must never
+    # cost more than ~11% of the pinned throughput — the abs_floor is
+    # the acceptance bar (>= 0.9x passes regardless of baseline drift).
+    "serve/auto_vs_pinned:ratio": dict(higher_is_better=True,
+                                       rel_tol=0.30, abs_floor=0.9),
+    # pure cost-model row: modeled per-request setup cliff (accumulated
+    # over rotseq_batched, penalty-free attribution) at batch 64.  The
+    # live_floor pins the >= 5x acceptance bar; deterministic
+    # arithmetic, warn-only so model retunes surface in artifacts
+    # without gating unrelated PRs unless the cliff flattens away.
+    "serve/prediction_cliff:ratio": dict(higher_is_better=True,
+                                         rel_tol=0.10, warn_only=True,
+                                         live_floor=5.0),
     # sustained streaming throughput (the repro.serve.stream engine,
     # open-loop at batch 64).  ``live_floor`` encodes the subsystem's
     # acceptance bar — 5x the synchronous serve/bucketed baseline rate

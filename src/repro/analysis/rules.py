@@ -390,6 +390,66 @@ class RA204StreamConcurrencyDiscipline(Rule):
                     f"concurrent serving component")
 
 
+class RA205SilentSharedSequenceDefault(Rule):
+    """``Problem(batch>1)`` built outside the plan layers without saying
+    whether the batch shares one rotation sequence.
+
+    Incident: the serving path bucketed b independent requests into one
+    ``(b, m, n)`` dispatch and priced it as ``Problem(batch=64)`` — the
+    ``shared_sequence=True`` default silently claimed the per-sequence
+    setup (packing, Q_t accumulation) would be paid once and amortized
+    over the batch.  It is paid ``b`` times for per-request traffic, so
+    ``method="auto"`` picked ``accumulated``, rebuilt 64 factor sets per
+    flush, and ran ~10x slower than the fused kernel at batch 64; the
+    serving bench had to pin ``method="rotseq_batched"`` to stay above
+    its throughput floor.  The fix threads ``shared_sequence`` from
+    every producer, and this rule keeps the default from lying again:
+    any ``repro.*`` module outside ``repro.core.registry`` /
+    ``repro.core.sequence`` (the layers that *define* the pricing and
+    normalize the flag) that constructs a registry ``Problem`` with a
+    batch that is not literally 1 must spell ``shared_sequence=``
+    explicitly — whichever value it means.
+    """
+
+    id = "RA205"
+    title = "batched Problem() without explicit shared_sequence"
+
+    ALLOWED = {"repro.core.registry", "repro.core.sequence"}
+    TARGETS = {"repro.core.registry.Problem"}
+
+    @staticmethod
+    def _batch_may_exceed_one(node: ast.AST) -> bool:
+        # literal 0/1 batches price identically either way; anything
+        # else (a larger literal, or a runtime value we cannot see
+        # through) can be a per-request bucket and must be labelled
+        if isinstance(node, ast.Constant) and node.value in (0, 1, True):
+            return False
+        return True
+
+    def check(self, mi: ModuleInfo) -> Iterable[Violation]:
+        if not _in_repro(mi) or mi.module in self.ALLOWED:
+            return
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if mi.dotted(node.func) not in self.TARGETS:
+                continue
+            kw_names = {kw.arg for kw in node.keywords}
+            if None in kw_names:
+                continue  # **splat may carry shared_sequence; can't see
+            if "shared_sequence" in kw_names:
+                continue
+            batch = next((kw.value for kw in node.keywords
+                          if kw.arg == "batch"), None)
+            if batch is not None and self._batch_may_exceed_one(batch):
+                yield self.hit(
+                    mi, node,
+                    "Problem(batch=...) without shared_sequence=; a "
+                    "per-request bucket priced as a shared-sequence "
+                    "batch amortizes setup it actually pays b times — "
+                    "say shared_sequence=True/False explicitly")
+
+
 # --------------------------------------------------------------------------
 # RA3xx — bitwise contract
 # --------------------------------------------------------------------------
@@ -909,6 +969,7 @@ ALL_RULES: Tuple[type, ...] = (
     RA202KernelImportOutsideRegistry,
     RA203TypedLayerOnly,
     RA204StreamConcurrencyDiscipline,
+    RA205SilentSharedSequenceDefault,
     RA301InlinePlaneStencil,
     RA302FoldableSignLiteral,
     RA401KernelHostRoundTrip,

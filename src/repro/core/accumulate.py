@@ -14,6 +14,14 @@ Accumulation cost is amortized by ``m / w``.
 ``Q_t`` is banded (columns of ``Q_t`` mix at most ``k_b`` neighbours below),
 but we apply it densely: for ``n_b ~ k_b`` the band covers most of ``Q`` and
 dense matmuls keep the MXU at full tilt.
+
+In the registry's cost split (docs/cost-model.md) the factor
+accumulation and tile packing are *setup* — per-sequence work, paid
+once for a shared-sequence batch but ``b`` times for the serving
+path's per-request buckets — while the GEMM sweep is *stream*, scaling
+with the rows of ``A``.  That asymmetry is why this backend wins
+batched accumulator flushes yet loses serving buckets of the same
+shape to the fused kernel.
 """
 from __future__ import annotations
 

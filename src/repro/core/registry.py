@@ -1,29 +1,19 @@
 """Backend registry + cost-model dispatch for rotation-sequence application.
 
-Each backend (``unoptimized``, ``wavefront``, ``blocked``, ``accumulated``,
-``pallas_wave``, ``pallas_mxu``, ``rotseq_batched``) registers a
-:class:`BackendSpec`:
+Every backend registers a :class:`BackendSpec` (capability record, §6
+memory-operation cost model split into per-sequence *setup* and per-row
+*stream* terms, tile-candidate generator); ``select_plan`` ranks the
+eligible (backend, tile) candidates by modeled cost — optionally
+re-ranked by measured wall time with ``autotune=True`` — and caches the
+winning :class:`Plan` per problem key, write-through to an on-disk store
+for measured plans.  :class:`Problem.shared_sequence` distinguishes one
+sequence amortized over a batch from the serving path's
+one-sequence-per-request batches, which pay setup × b.
 
-* a **capability record** — supported dtypes, platforms, per-entry sign
-  (``G``) support, shard_map compatibility, tile-shape bounds, and whether
-  the backend needs Pallas (and tolerates interpret mode);
-* a **cost model** derived from the paper's memory-operation analysis
-  (SS6): estimated seconds = max(flop term, memory-traffic term) against
-  the platform's peak rates, with the paper's per-variant memop counts
-  (4mnk unblocked, 2mnk wavefront, 2mn.ceil(k/k_b) blocked/accumulated)
-  and the accumulated path's 4/3-flop GEMM trade priced at MXU rate;
-* a **tile candidate generator** — the ``(n_b, k_b, m_blk)`` grid the
-  selector searches for a given problem.
-
-``select_plan`` ranks eligible backends x tile candidates by modeled cost
-(optionally re-ranked by *measured* wall time when ``autotune=True``) and
-caches the winning :class:`Plan` per ``(shape, dtype, platform, signs)``.
-Measured plans are additionally *persisted* to disk
-(``~/.cache/repro/plans.json``, override with ``REPRO_PLAN_CACHE``, keyed
-by problem + JAX version; atomic write, loaded when the backend registry
-finishes populating) so autotune cost is paid once per machine, not once
-per process.  The hardware table :data:`PLATFORMS` is the single source
-of peak numbers, shared with ``launch.roofline``.
+The full pricing derivation (every backend's flop/memop/setup formula,
+the per-request correction, and a worked batch-64 example) lives in
+``docs/cost-model.md``; ``docs/architecture.md`` places this module in
+the registry → sequence → serve → stream layer diagram.
 """
 from __future__ import annotations
 
@@ -74,8 +64,17 @@ class Problem:
     Rotations act row-wise, so a shared-sequence batch flattens to a
     ``(batch*m, n)`` problem: streaming traffic and sweep flops scale
     with the batch while per-sequence setup work (accumulating tile
-    factors ``Q_t``) is paid once — which is why ``method="auto"`` can
-    pick a different backend at ``batch=64`` than at ``batch=1``.
+    factors ``Q_t``, packing sheared tiles) is paid once — which is why
+    ``method="auto"`` can pick a different backend at ``batch=64`` than
+    at ``batch=1``.
+
+    ``shared_sequence`` says whether those ``batch`` targets share one
+    rotation sequence (the default — a batched accumulator flush) or
+    each carry their own (the serving path's per-request buckets, via
+    ``apply_batched(A, sequences=...)``).  Per-request batches rebuild
+    the per-sequence setup ``batch`` times, so the same shape can price
+    — and plan — onto a different backend (see ``docs/cost-model.md``,
+    "the per-request correction").
     """
     m: int
     n: int
@@ -85,6 +84,9 @@ class Problem:
     signs: bool = False    # needs per-entry G support
     sharded: bool = False  # must be traceable inside shard_map
     batch: int = 1         # independent (m, n) targets per application
+    # one sequence amortized over the batch (True) vs one sequence per
+    # batch element (False, the serving path).  Irrelevant at batch=1.
+    shared_sequence: bool = True
     # live (non-identity) planes in the (n-1, k) grid, when statically
     # known (RotationSequence.k_live): pad_to tails and seq.T staircase
     # padding make the live fraction tiny, which only plane-skipping
@@ -101,6 +103,13 @@ class Problem:
     def m_total(self) -> int:
         """Total rows streamed per application (``batch * m``)."""
         return self.m * max(1, self.batch)
+
+    @property
+    def sequences(self) -> int:
+        """Distinct rotation sequences the application pays setup for."""
+        if self.batch <= 1 or self.shared_sequence:
+            return 1
+        return self.batch
 
     @property
     def planes_total(self) -> int:
@@ -235,80 +244,138 @@ def _roofline_seconds(flop_term: float, byte_term: float) -> float:
     return max(flop_term, byte_term, _LATENCY_FLOOR)
 
 
-def _components_unoptimized(p: Problem, plan: Plan) -> Tuple[float, float]:
-    flops = 6.0 * p.m_total * p.n * p.k
-    memops = 4.0 * p.m_total * p.n * p.k * p.itemsize
-    return flops, memops
+# Each ``_components_*`` function returns the §6 traffic split into an
+# explicit per-sequence **setup** term (building the accumulated path's
+# Q_t factors, packing sheared tiles, streaming per-request wave panels
+# — work proportional to the sequence, paid once per *distinct*
+# sequence) and a per-row **stream** term (work proportional to the
+# rows of A).  The returned totals are already scaled: setup terms are
+# multiplied by ``Problem.sequences`` (1 for a shared-sequence batch,
+# b for the serving path's per-request batches), which is the whole
+# per-request pricing correction — see docs/cost-model.md.
+_ZERO_SPLIT = {"setup_flops": 0.0, "setup_bytes": 0.0,
+               "stream_flops": 0.0, "stream_bytes": 0.0}
+
+
+def _split(setup_flops=0.0, setup_bytes=0.0,
+           stream_flops=0.0, stream_bytes=0.0) -> Dict[str, float]:
+    return {"setup_flops": float(setup_flops),
+            "setup_bytes": float(setup_bytes),
+            "stream_flops": float(stream_flops),
+            "stream_bytes": float(stream_bytes)}
+
+
+def _components_unoptimized(p: Problem, plan: Plan) -> Dict[str, float]:
+    # Alg 1.2 touches nothing per-sequence beyond the C/S panel itself,
+    # which is dominated by its 4-memop-per-rotation streaming.
+    return _split(stream_flops=6.0 * p.m_total * p.n * p.k,
+                  stream_bytes=4.0 * p.m_total * p.n * p.k * p.itemsize)
 
 
 def cost_unoptimized(p: Problem, plan: Plan) -> float:
     """Alg 1.2: 4 memops per rotation, no reuse (paper SS6 baseline)."""
     hw = p.hardware
-    flops, memops = _components_unoptimized(p, plan)
-    return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+    c = _components_unoptimized(p, plan)
+    return _roofline_seconds(c["stream_flops"] / hw.vpu_flops,
+                             c["stream_bytes"] / hw.hbm_bw)
 
 
-def _components_wavefront(p: Problem, plan: Plan) -> Tuple[float, float]:
-    flops = 6.0 * p.m_total * p.n * p.k
-    memops = 2.0 * p.m_total * p.n * p.k * p.itemsize
-    return flops, memops
+def _components_wavefront(p: Problem, plan: Plan) -> Dict[str, float]:
+    return _split(stream_flops=6.0 * p.m_total * p.n * p.k,
+                  stream_bytes=2.0 * p.m_total * p.n * p.k * p.itemsize)
 
 
 def cost_wavefront(p: Problem, plan: Plan) -> float:
     """Alg 1.3: wavefront fuses column touches to ~2 memops/rotation."""
     hw = p.hardware
-    flops, memops = _components_wavefront(p, plan)
-    return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+    c = _components_wavefront(p, plan)
+    return _roofline_seconds(c["stream_flops"] / hw.vpu_flops,
+                             c["stream_bytes"] / hw.hbm_bw)
 
 
-def _components_blocked(p: Problem, plan: Plan) -> Tuple[float, float]:
+def _tile_grid(p: Problem, n_b: int, k_b: int) -> Tuple[int, int, int]:
+    """``(bands, tiles, w)`` of the sheared-tile decomposition (SS5)."""
+    w = n_b + k_b
+    bands = _bands(p.k, k_b)
+    tiles = max(1, math.ceil((p.n + k_b - 1) / n_b))
+    return bands, tiles, w
+
+
+def _pack_bytes(p: Problem, n_b: int, k_b: int) -> float:
+    """Per-sequence sheared-tile packing traffic (blocked/accumulated).
+
+    Each band's ``k_b`` waves are gathered into ``tiles`` sheared
+    ``(w, k_b)`` tiles per wave array before any row of A moves: the
+    raw ``(n-1, k)`` panels are read once and the padded tile buffers
+    written once.  Signs add a third array.
+    """
+    bands, tiles, w = _tile_grid(p, n_b, k_b)
+    arrays = 3 if p.signs else 2
+    read = arrays * p.planes_total
+    write = arrays * bands * tiles * w * k_b
+    return (read + write) * p.itemsize
+
+
+def _components_blocked(p: Problem, plan: Plan) -> Dict[str, float]:
+    n_b = plan.n_b or 64
     k_b = plan.k_b or 16
-    flops = 6.0 * p.m_total * p.n * p.k
-    memops = 2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b)
-    return flops, memops
+    return _split(
+        setup_bytes=p.sequences * _pack_bytes(p, n_b, k_b),
+        stream_flops=6.0 * p.m_total * p.n * p.k,
+        stream_bytes=2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b))
 
 
 def cost_blocked(p: Problem, plan: Plan) -> float:
     """Blocked wavefront: A streams once per band of k_b waves (SS5)."""
     hw = p.hardware
-    flops, memops = _components_blocked(p, plan)
-    return _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+    c = _components_blocked(p, plan)
+    return _roofline_seconds(
+        c["stream_flops"] / hw.vpu_flops,
+        (c["setup_bytes"] + c["stream_bytes"]) / hw.hbm_bw)
 
 
 def _accumulated_flops(p: Problem, n_b: int, k_b: int) -> Tuple[float, float]:
-    """(MXU flops, VPU accumulation flops) for the rs_gemm formulation.
+    """(MXU sweep flops, per-sequence VPU accumulation flops).
 
     The GEMM sweep streams every row of every batched target
     (``m_total``); accumulating the tile factors ``Q_t`` happens once
-    per *sequence*, so a shared-sequence batch amortizes it — this is
-    the term that flips ``method="auto"`` from the blocked family at
-    ``batch=1`` to the accumulated family at large batch.
+    per *sequence* — amortized by a shared-sequence batch, multiplied
+    by ``b`` on the serving path's per-request batches (the cliff
+    ``docs/cost-model.md`` walks through at batch 64).
     """
     w = n_b + k_b
-    bands = _bands(p.k, k_b)
-    tiles = max(1, math.ceil((p.n + k_b - 1) / n_b))
+    bands, tiles, _ = _tile_grid(p, n_b, k_b)
     sweep = bands * tiles * 2.0 * p.m_total * w * w      # (m,w) @ (w,w)
     accum = bands * tiles * 6.0 * w * n_b * k_b          # Q_t = I rotated
     return sweep, accum
 
 
-def _components_accumulated(p: Problem, plan: Plan) -> Tuple[float, float]:
+def _components_accumulated(p: Problem, plan: Plan) -> Dict[str, float]:
     n_b = plan.n_b or 128
     k_b = plan.k_b or 128
     sweep, accum = _accumulated_flops(p, n_b, k_b)
-    memops = 2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b)
-    return sweep + accum, memops
+    bands, tiles, w = _tile_grid(p, n_b, k_b)
+    q_bytes = bands * tiles * w * w * p.itemsize  # Q_t factors written
+    return _split(
+        setup_flops=p.sequences * accum,
+        setup_bytes=p.sequences * (_pack_bytes(p, n_b, k_b) + q_bytes),
+        stream_flops=sweep,
+        stream_bytes=2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b))
 
 
 def cost_accumulated(p: Problem, plan: Plan) -> float:
-    """rs_gemm: ~4/3 extra flops (n_b = k_b) priced at matmul rate."""
+    """rs_gemm: ~4/3 extra flops (n_b = k_b) priced at matmul rate.
+
+    The sweep GEMMs run at MXU rate; the per-sequence ``Q_t``
+    accumulation is short-vector VPU work, multiplied by ``b`` for
+    per-request batches.
+    """
     hw = p.hardware
-    n_b = plan.n_b or 128
-    k_b = plan.k_b or 128
-    sweep, accum = _accumulated_flops(p, n_b, k_b)
-    flop_term = sweep / hw.mxu_flops + accum / hw.vpu_flops
-    memops = 2.0 * p.m_total * p.n * p.itemsize * _bands(p.k, k_b)
-    return _roofline_seconds(flop_term, memops / hw.hbm_bw)
+    c = _components_accumulated(p, plan)
+    flop_term = (c["stream_flops"] / hw.mxu_flops
+                 + c["setup_flops"] / hw.vpu_flops)
+    return _roofline_seconds(
+        flop_term, (c["setup_bytes"] + c["stream_bytes"]) / hw.hbm_bw)
 
 
 def _interpret_factor(p: Problem) -> float:
@@ -316,22 +383,34 @@ def _interpret_factor(p: Problem) -> float:
 
 
 def cost_pallas_wave(p: Problem, plan: Plan) -> float:
-    """VPU kernel: blocked-wavefront traffic, carry pinned in VMEM."""
+    """VPU kernel: blocked-wavefront traffic, carry pinned in VMEM.
+
+    ``supports_vmap=False``: a per-request batch runs as ``b`` separate
+    launches, so the latency floor multiplies by the sequence count.
+    """
     return max(0.7 * cost_blocked(p, plan) * _interpret_factor(p),
-               _LATENCY_FLOOR)
+               p.sequences * _LATENCY_FLOOR)
 
 
 def cost_pallas_mxu(p: Problem, plan: Plan) -> float:
-    """MXU kernel: accumulated-path traffic at kernel-fused constants."""
+    """MXU kernel: accumulated-path traffic at kernel-fused constants.
+
+    Like ``pallas_wave``, per-request batches loop-launch per sequence.
+    """
     return max(0.7 * cost_accumulated(p, plan) * _interpret_factor(p),
-               _LATENCY_FLOOR)
+               p.sequences * _LATENCY_FLOOR)
 
 
-def _components_rotseq_batched(p: Problem, plan: Plan) -> Tuple[float, float]:
-    flops = 6.0 * p.m_total * p.planes_live
-    memops = (2.0 * p.m_total * p.n
-              + 3.0 * max(1, p.batch) * p.planes_total) * p.itemsize
-    return flops, memops
+def _components_rotseq_batched(p: Problem, plan: Plan) -> Dict[str, float]:
+    # The stacked C/S/G panel streams once per grid batch element
+    # whether or not the sequence is shared (the kernel's grid walks
+    # batch-major), so the panel term scales with ``batch``, not
+    # ``sequences`` — the kernel's per-request price is flat, which is
+    # exactly why it wins serving buckets.
+    return _split(
+        setup_bytes=3.0 * max(1, p.batch) * p.planes_total * p.itemsize,
+        stream_flops=6.0 * p.m_total * p.planes_live,
+        stream_bytes=2.0 * p.m_total * p.n * p.itemsize)
 
 
 def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
@@ -346,8 +425,10 @@ def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
     through.
     """
     hw = p.hardware
-    flops, memops = _components_rotseq_batched(p, plan)
-    secs = _roofline_seconds(flops / hw.vpu_flops, memops / hw.hbm_bw)
+    c = _components_rotseq_batched(p, plan)
+    secs = _roofline_seconds(
+        c["stream_flops"] / hw.vpu_flops,
+        (c["setup_bytes"] + c["stream_bytes"]) / hw.hbm_bw)
     # On-chip residency bounds, priced out rather than hard-filtered:
     # the (n, m_blk) slab must fit in VMEM for the single-pass
     # assumption to hold, and the scalar-indexed C/S/G panels live in
@@ -365,11 +446,11 @@ def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
     return max(secs * _interpret_factor(p), _LATENCY_FLOOR)
 
 
-# the (flops, bytes) arithmetic behind each cost model, exposed so the
+# the setup/stream traffic split behind each cost model, exposed so the
 # obs roofline layer attributes dispatches with the *same* numbers the
 # planner ranked candidates with (pallas kernels move blocked /
 # accumulated traffic; only their seconds constant differs)
-_COMPONENT_FNS: Dict[str, Callable[[Problem, Plan], Tuple[float, float]]] = {
+_COMPONENT_FNS: Dict[str, Callable[[Problem, Plan], Dict[str, float]]] = {
     "unoptimized": _components_unoptimized,
     "wavefront": _components_wavefront,
     "blocked": _components_blocked,
@@ -379,23 +460,49 @@ _COMPONENT_FNS: Dict[str, Callable[[Problem, Plan], Tuple[float, float]]] = {
     "rotseq_batched": _components_rotseq_batched,
 }
 
+# stream flops run at MXU rate for the GEMM family, VPU elsewhere;
+# setup flops (Q_t accumulation) are always short-vector VPU work
+_MXU_STREAM = ("accumulated", "pallas_mxu")
+
 
 def cost_components(method: str, problem: Problem,
                     plan: Optional[Plan] = None) -> dict:
-    """Predicted ``{"flops", "bytes", "seconds"}`` for one dispatch.
+    """Predicted traffic + seconds for one dispatch, split by term.
 
-    ``flops``/``bytes`` come from the §6 memory-operation analysis of
-    the named backend (zero for backends registered without a component
-    entry); ``seconds`` is the registered cost model itself, so
-    ``seconds`` always matches what ``select_plan`` ranked by.  Pure
-    arithmetic — safe to call from metrics/snapshot paths (RA5).
+    Returns ``{"flops", "bytes", "seconds", "setup": {...},
+    "stream": {...}}``.  Top-level ``flops``/``bytes`` are the summed
+    §6 memory-operation analysis of the named backend (zero for
+    backends registered without a component entry); ``seconds`` is the
+    registered cost model itself, so it always matches what
+    ``select_plan`` ranked by — including the interpret penalty and
+    residency guards.  The ``setup``/``stream`` sub-dicts carry the
+    per-sequence vs per-row split with *additive, penalty-free*
+    attribution seconds (pure traffic over peak rates), so the obs
+    roofline ledger — and the bench row that watches the per-request
+    accumulated cliff — can attribute ``model_fraction`` per term.
+    Pure arithmetic — safe to call from metrics/snapshot paths (RA5).
     """
     spec = get_backend(method)
     plan = plan if plan is not None else Plan(method=method)
-    comp = _COMPONENT_FNS.get(method)
-    flops, memops = comp(problem, plan) if comp is not None else (0.0, 0.0)
-    return {"flops": float(flops), "bytes": float(memops),
-            "seconds": float(spec.cost(problem, plan))}
+    comp_fn = _COMPONENT_FNS.get(method)
+    c = comp_fn(problem, plan) if comp_fn is not None else _ZERO_SPLIT
+    hw = problem.hardware
+    stream_rate = hw.mxu_flops if method in _MXU_STREAM else hw.vpu_flops
+    setup_s = (c["setup_flops"] / hw.vpu_flops
+               + c["setup_bytes"] / hw.hbm_bw)
+    stream_s = (c["stream_flops"] / stream_rate
+                + c["stream_bytes"] / hw.hbm_bw)
+    return {
+        "flops": float(c["setup_flops"] + c["stream_flops"]),
+        "bytes": float(c["setup_bytes"] + c["stream_bytes"]),
+        "seconds": float(spec.cost(problem, plan)),
+        "setup": {"flops": float(c["setup_flops"]),
+                  "bytes": float(c["setup_bytes"]),
+                  "seconds": float(setup_s)},
+        "stream": {"flops": float(c["stream_flops"]),
+                   "bytes": float(c["stream_bytes"]),
+                   "seconds": float(stream_s)},
+    }
 
 
 # --------------------------------------------------------------------------
@@ -631,15 +738,20 @@ def _plan_key(problem: Problem) -> tuple:
 
     ``batch=1`` keys keep the legacy 7-tuple layout so plan caches
     persisted before the batch field existed stay valid; batched
-    problems append the batch count, and problems with a static
-    live-plane count (padded/staircase sequences, which plane-skipping
-    backends price differently) append ``("live", count)`` after it.
+    problems append the batch count, per-request batches
+    (``shared_sequence=False``, which price setup × b and can plan
+    differently) append a ``"per_req"`` marker after it, and problems
+    with a static live-plane count (padded/staircase sequences, which
+    plane-skipping backends price differently) append
+    ``("live", count)`` last.
     """
     base = (problem.m, problem.n, problem.k, problem.dtype,
             problem.platform, problem.signs, problem.sharded)
     if problem.batch == 1 and problem.live_planes is None:
         return base
     base = base + (problem.batch,)
+    if problem.batch > 1 and not problem.shared_sequence:
+        base = base + ("per_req",)
     if problem.live_planes is not None:
         base = base + ("live", problem.live_planes)
     return base
@@ -649,21 +761,28 @@ def _split_key(key: tuple):
     """``key -> ((m, n, k, batch), class, live_fraction)``.
 
     ``class`` is the eligibility tuple ``(dtype, platform, signs,
-    sharded)``.  ``live_fraction`` decodes the optional trailing
-    ``("live", count)`` marker as ``count / ((n-1) * k)`` (``None``
-    when absent): liveness changes which backend wins — a measured
-    plane-skipping plan for a thin staircase must not transfer at
-    distance 0 to the dense grid of the same shape — so interpolation
-    treats dense and live-annotated keys as distinct classes and adds
-    the live-fraction ratio to the distance within the latter.
+    sharded, shared_sequence)``.  Shared-sequence and per-request keys
+    are distinct classes — a measured plan for one sequence amortized
+    over a batch must not transfer at distance 0 to the same shape
+    paying setup per request (the backends differ, exactly like dense
+    vs live-annotated).  ``live_fraction`` decodes the optional
+    trailing ``("live", count)`` marker as ``count / ((n-1) * k)``
+    (``None`` when absent): liveness changes which backend wins, so
+    dense and live-annotated keys are distinct classes too, with the
+    live-fraction ratio added to the distance within the latter.
     """
     m, n, k = key[:3]
     batch = key[7] if len(key) > 7 else 1
+    shared = True
+    idx = 8
+    if len(key) > idx and key[idx] == "per_req":
+        shared = False
+        idx += 1
     frac = None
-    if len(key) > 9 and key[8] == "live":
+    if len(key) > idx + 1 and key[idx] == "live":
         planes = max(1, (n - 1) * k)
-        frac = max(1, int(key[9])) / planes
-    return (m, n, k, batch), tuple(key[3:7]), frac
+        frac = max(1, int(key[idx + 1])) / planes
+    return (m, n, k, batch), tuple(key[3:7]) + (shared,), frac
 
 
 def _interpolated_plan(problem: Problem, key: tuple) -> Optional[Plan]:
@@ -687,7 +806,7 @@ def _interpolated_plan(problem: Problem, key: tuple) -> Optional[Plan]:
         if plan.source not in _PERSISTED_SOURCES:
             continue
         (m2, n2, k2, b2), cls2, frac2 = _split_key(cached_key)
-        if cls2 != cls1:  # (dtype, platform, signs, sharded)
+        if cls2 != cls1:  # (dtype, platform, signs, sharded, shared_seq)
             continue
         if (frac2 is None) != (frac1 is None):
             continue  # dense vs live-annotated: different regimes
@@ -713,36 +832,42 @@ def _interpolated_plan(problem: Problem, key: tuple) -> Optional[Plan]:
 
 
 def _modeled_plans(problem: Problem) -> List[Plan]:
-    """All eligible (backend, tile) plans, costed and sorted ascending."""
+    """All eligible (backend, tile) plans, costed and sorted ascending.
+
+    Problems small enough to hit the latency floor tie on seconds; the
+    tie-break is total modeled traffic (the §6 criterion itself), not
+    backend registration order — at floor-bound sizes the
+    least-communication plan is still the principled pick.
+    """
     plans: List[Plan] = []
     for spec in eligible_backends(problem):
         for cand in spec.candidates(problem):
             plan = dataclasses.replace(cand, method=spec.name)
             cost = spec.cost(problem, plan)
             plans.append(dataclasses.replace(plan, est_seconds=cost))
-    plans.sort(key=lambda pl: pl.est_seconds)
+
+    def _rank(pl: Plan):
+        comp_fn = _COMPONENT_FNS.get(pl.method)
+        if comp_fn is None:
+            return (pl.est_seconds, float("inf"))
+        c = comp_fn(problem, pl)
+        return (pl.est_seconds, c["setup_bytes"] + c["stream_bytes"])
+
+    plans.sort(key=_rank)
     return plans
 
 
-def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
-    """Median wall-time of one real application at ``plan``'s tiles.
+def _synthetic_waves(problem: Problem, rng):
+    """One ``(C, S, G)`` wave draw matching the problem record.
 
-    The synthetic workload matches the problem record: a per-entry sign
-    array is included when ``problem.signs`` so sign-carrying plans are
-    timed on the code path they will actually serve, and a
-    ``live_planes`` bound identity-pads the trailing waves so
-    plane-skipping backends are timed on (approximately) the live grid
-    they will execute, not a dense one ~grid/live times costlier.
+    A per-entry sign array is included when ``problem.signs`` so
+    sign-carrying plans are timed on the code path they will actually
+    serve, and a ``live_planes`` bound identity-pads the trailing waves
+    so plane-skipping backends are timed on (approximately) the live
+    grid they will execute, not a dense one ~grid/live times costlier.
     """
-    import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    rng = np.random.default_rng(0)
-    dt = jnp.dtype(problem.dtype)
-    # batched problems execute flattened (rotations are row-wise), so
-    # time the shape the serving path will actually run
-    A = jnp.asarray(rng.standard_normal((problem.m_total, problem.n)), dt)
     th = rng.standard_normal((problem.n - 1, problem.k))
     Cn, Sn = np.cos(th), np.sin(th)
     if problem.live_planes is not None \
@@ -751,18 +876,19 @@ def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
                                / max(1, problem.n - 1))
         Cn[:, live_waves:] = 1.0
         Sn[:, live_waves:] = 0.0
-    C = jnp.asarray(Cn, dt)
-    S = jnp.asarray(Sn, dt)
-    G = None
+    Gn = None
     if problem.signs:
         Gn = np.where(rng.random((problem.n - 1, problem.k)) < 0.5,
                       1.0, -1.0)
         # identity padding must stay a rotation (a padded reflector is
         # live), or the live_planes-shaped workload above is undone
         Gn[(Cn == 1.0) & (Sn == 0.0)] = -1.0
-        G = jnp.asarray(Gn, dt)
-    spec = get_backend(plan.method)
-    fn = lambda: spec.fn(A, C, S, reflect=False, G=G, **plan.kwargs())
+    return Cn, Sn, Gn
+
+
+def _time_median(fn: Callable, reps: int) -> float:
+    import jax
+
     jax.block_until_ready(fn())  # compile
     ts = []
     for _ in range(reps):
@@ -772,9 +898,74 @@ def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
     return sorted(ts)[len(ts) // 2]
 
 
+def _measure_plan(problem: Problem, plan: Plan, reps: int = 2) -> float:
+    """Median wall-time of one real application at ``plan``'s tiles.
+
+    The synthetic workload matches the problem record (signs, live
+    planes — see :func:`_synthetic_waves`).  Shared-sequence batches
+    execute flattened (rotations are row-wise), so they are timed as
+    the ``(batch*m, n)`` problem the dispatch path will actually run;
+    per-request batches are timed through
+    ``SequencePlan.apply_batched(A, sequences=...)`` with ``batch``
+    *distinct* sequences, so the fused / vmap / loop execution strategy
+    — and the per-sequence setup this problem re-pays ``b`` times — is
+    measured, not a single broadcast sequence that would hide it.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    if problem.batch > 1 and not problem.shared_sequence:
+        return _measure_plan_per_request(problem, plan, reps)
+    rng = np.random.default_rng(0)
+    dt = jnp.dtype(problem.dtype)
+    A = jnp.asarray(rng.standard_normal((problem.m_total, problem.n)), dt)
+    Cn, Sn, Gn = _synthetic_waves(problem, rng)
+    C, S = jnp.asarray(Cn, dt), jnp.asarray(Sn, dt)
+    G = None if Gn is None else jnp.asarray(Gn, dt)
+    spec = get_backend(plan.method)
+    fn = lambda: spec.fn(A, C, S, reflect=False, G=G, **plan.kwargs())
+    return _time_median(fn, reps)
+
+
+def _measure_plan_per_request(problem: Problem, plan: Plan,
+                              reps: int) -> float:
+    """Per-request-batch measurement: ``batch`` distinct sequences.
+
+    Routed through the same ``apply_batched`` strategy dispatch the
+    serving path uses (fused kernel, ``jax.vmap``, or per-element
+    loop), because that execution shape — not the flattened broadcast —
+    is what a per-request plan will actually run.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    # plan-layer import, deferred: sequence.py imports this module
+    from repro.core import sequence as _sequence
+
+    rng = np.random.default_rng(0)
+    dt = jnp.dtype(problem.dtype)
+    A = jnp.asarray(
+        rng.standard_normal((problem.batch, problem.m, problem.n)), dt)
+    seqs = []
+    for _ in range(problem.batch):
+        Cn, Sn, Gn = _synthetic_waves(problem, rng)
+        seq = _sequence.RotationSequence(
+            jnp.asarray(Cn, dt), jnp.asarray(Sn, dt),
+            None if Gn is None else jnp.asarray(Gn, dt))
+        if problem.live_planes is not None:
+            seq = dataclasses.replace(
+                seq, k_live=min(problem.live_planes, problem.planes_total))
+        seqs.append(seq)
+    sp = _sequence.SequencePlan(seqs[0], plan.method,
+                                tuple(sorted(plan.kwargs().items())), plan)
+    fn = lambda: sp.apply_batched(A, sequences=seqs, direct=True)
+    return _time_median(fn, reps)
+
+
 def select_plan(m: int, n: int, k: int, *, dtype="float32",
                 platform: Optional[str] = None, signs: bool = False,
                 sharded: bool = False, batch: int = 1,
+                shared_sequence: bool = True,
                 live_planes: Optional[int] = None,
                 autotune: bool = False, autotune_top: int = 3) -> Plan:
     """Pick ``(method, n_b, k_b, m_blk)`` for a problem, with caching.
@@ -789,6 +980,14 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     ``batch`` is the number of independent ``(m, n)`` targets served per
     application (see :class:`Problem`): the amortization terms differ,
     so batch 64 can legitimately pick a different backend than batch 1.
+    ``shared_sequence=False`` marks a *per-request* batch (one distinct
+    sequence per target, the serving path): per-sequence setup terms
+    multiply by ``b`` instead of amortizing, the cache key carries a
+    ``"per_req"`` marker, and autotune measures ``b`` distinct
+    sequences through the real batched dispatch — additionally timing
+    the best candidate of *every* eligible backend, because the
+    traffic model cannot see fused/vmap/loop execution constants
+    (docs/cost-model.md, "the per-request correction").
     ``live_planes`` is the statically-known count of non-identity
     planes (``RotationSequence.k_live``): plane-skipping backends price
     padded/staircase grids by their live fraction, so a ``seq.T``
@@ -809,6 +1008,9 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     platform = platform or compat.default_platform()
     dtype = str(jnp.dtype(dtype))
     batch = max(1, int(batch))
+    # a batch of one is its own sequence either way: normalize so the
+    # legacy cache key (and plan) is shared by both spellings
+    shared_sequence = bool(shared_sequence) or batch <= 1
     # Measurements time THIS host's default backend; for any other
     # platform (or a shard_map sub-problem, which can't be reproduced
     # standalone) fall back to model ranking rather than cache bogus
@@ -818,6 +1020,7 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     autotune = autotune and can_measure
     problem = Problem(m=m, n=n, k=k, dtype=dtype, platform=platform,
                       signs=signs, sharded=sharded, batch=batch,
+                      shared_sequence=shared_sequence,
                       live_planes=live_planes)
     key = _plan_key(problem)
     cached = _PLAN_CACHE.get(key)
@@ -854,6 +1057,19 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
         best = plans[0]
         if autotune:
             candidates = plans[:max(1, autotune_top)]
+            if batch > 1 and not shared_sequence:
+                # Per-request batches execute through fused / vmap /
+                # per-element-loop strategies whose constants the §6
+                # traffic model cannot see (interpret-mode kernels
+                # included), so widen the measured set to the best
+                # modeled candidate of every eligible backend and let
+                # measurement arbitrate — the model still prunes tiles
+                # within each backend.
+                seen = {pl.method for pl in candidates}
+                for pl in plans:
+                    if pl.method not in seen:
+                        seen.add(pl.method)
+                        candidates.append(pl)
             # an interpolated entry being upgraded is a real hint:
             # measure its tiles too, even when the model does not rank
             # them top-N

@@ -385,7 +385,7 @@ class RotationSequence:
     def plan(self, like=None, *, m: Optional[int] = None,
              method: str = "auto", autotune: bool = False,
              platform: Optional[str] = None, sharded: bool = False,
-             batch: Optional[int] = None,
+             batch: Optional[int] = None, shared_sequence: bool = True,
              n_b: Optional[int] = None, k_b: Optional[int] = None,
              **kw) -> "SequencePlan":
         """Resolve the registry once into a frozen :class:`SequencePlan`.
@@ -394,7 +394,12 @@ class RotationSequence:
         count and dtype; ``m`` overrides the row count.  A 3D ``like``
         (``(b, m, n)``, a batched target for :meth:`SequencePlan.
         apply_batched`) supplies the batch count too; ``batch``
-        overrides it.  ``method="auto"`` runs capability filtering + the
+        overrides it.  ``shared_sequence=False`` declares the batch
+        *per-request* — each target will carry its own sequence via
+        ``apply_batched(A, sequences=...)`` — which prices per-sequence
+        setup × b and can plan onto a different backend than the same
+        batch sharing one sequence (docs/cost-model.md).
+        ``method="auto"`` runs capability filtering + the
         SS6 cost model (or measured ``autotune``) through the per-shape
         plan cache — batch-aware, so a batch-64 bucket can plan onto a
         different backend than a single request; a named method keeps
@@ -429,8 +434,8 @@ class RotationSequence:
                 plan = registry.select_plan(
                     m, n, k, dtype=dtype, platform=platform,
                     signs=self.sign is not None, sharded=sharded,
-                    batch=batch, live_planes=self.k_live,
-                    autotune=autotune)
+                    batch=batch, shared_sequence=shared_sequence,
+                    live_planes=self.k_live, autotune=autotune)
                 sp.set(method=plan.method, source=plan.source)
             planned = plan.kwargs()
             if n_b is not None:
@@ -591,7 +596,7 @@ class SequencePlan:
             out = self._apply_batched_impl(A, sequences, direct)
             out = jax.block_until_ready(out)
             dt = obs.timing.now() - t0
-        self._record_dispatch(A, dt)
+        self._record_dispatch(A, dt, shared=sequences is None)
         return out
 
     def _apply_batched_impl(self, A, sequences, direct: bool):
@@ -657,13 +662,17 @@ class SequencePlan:
                 f"plan built for n={self.sequence.n} targets; "
                 f"got A.shape={A.shape}")
 
-    def _record_dispatch(self, A, measured_s: float) -> None:
+    def _record_dispatch(self, A, measured_s: float,
+                         shared: bool = True) -> None:
         """Roofline-attribute one completed host-side dispatch.
 
         Called only on the obs-enabled, non-traced path, *after* the
         result is device-complete: pairs the §6 cost model's predicted
-        flops/bytes/seconds for this exact (problem, backend, tile)
-        with the measured wall time (see :mod:`repro.obs.roofline`).
+        flops/bytes/seconds — including the per-sequence setup vs
+        per-row stream split, priced per-request when the batch carried
+        distinct sequences (``shared=False``) — for this exact
+        (problem, backend, tile) with the measured wall time (see
+        :mod:`repro.obs.roofline`).
         """
         seq = self.sequence
         if A.ndim == 3:
@@ -674,14 +683,16 @@ class SequencePlan:
         problem = registry.Problem(
             m=m, n=seq.n, k=seq.k, dtype=str(A.dtype),
             platform=compat.default_platform(),
-            signs=seq.sign is not None, batch=b, live_planes=seq.k_live)
+            signs=seq.sign is not None, batch=b, shared_sequence=shared,
+            live_planes=seq.k_live)
         rplan = self.plan if self.plan is not None else registry.Plan(
             method=self.method, n_b=kw.get("n_b"), k_b=kw.get("k_b"),
             m_blk=kw.get("m_blk"))
         try:
             comp = registry.cost_components(self.method, problem, rplan)
         except ValueError:  # unregistered/identity method: no model
-            comp = {"flops": 0.0, "bytes": 0.0, "seconds": 0.0}
+            comp = {"flops": 0.0, "bytes": 0.0, "seconds": 0.0,
+                    "setup": {"seconds": 0.0}, "stream": {"seconds": 0.0}}
         obs.roofline.record_dispatch(
             backend=self.method, m_total=problem.m_total, n=seq.n,
             k=seq.k, batch=b, dtype=str(A.dtype),
@@ -690,7 +701,10 @@ class SequencePlan:
             planes_live=problem.planes_live,
             planes_total=problem.planes_total,
             predicted_flops=comp["flops"], predicted_bytes=comp["bytes"],
-            predicted_s=comp["seconds"], measured_s=measured_s)
+            predicted_s=comp["seconds"], measured_s=measured_s,
+            predicted_setup_s=comp["setup"]["seconds"],
+            predicted_stream_s=comp["stream"]["seconds"],
+            shared_sequence=shared)
         obs.inc("sequence.applies")
         obs.observe("sequence.apply_seconds", measured_s)
 

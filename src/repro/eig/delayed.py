@@ -159,8 +159,14 @@ class DelayedRotationBuffer:
                 plan_key = (seq.k, seq.sign is not None)
                 plan = self._plans.get(plan_key)
                 if plan is None:
+                    # a batched accumulator applies ONE pending sequence
+                    # to every basis in the (b, m, n) stack — a
+                    # shared-sequence batch (explicit, so the registry
+                    # amortizes per-sequence setup instead of pricing it
+                    # per basis like a serving bucket)
                     plan = seq.plan(like=self._M, method=self.method,
                                     autotune=self.autotune,
+                                    shared_sequence=True,
                                     **self.apply_kw)
                     self._plans[plan_key] = plan
                 else:

@@ -37,7 +37,10 @@ def record_dispatch(*, backend: str, m_total: int, n: int, k: int,
                     batch: int, dtype: str, tile: Dict[str, Any],
                     planes_live: int, planes_total: int,
                     predicted_flops: float, predicted_bytes: float,
-                    predicted_s: float, measured_s: float) -> None:
+                    predicted_s: float, measured_s: float,
+                    predicted_setup_s: float = 0.0,
+                    predicted_stream_s: float = 0.0,
+                    shared_sequence: bool = True) -> None:
     frac = predicted_s / measured_s if measured_s > 0.0 else 0.0
     rec = {
         "backend": backend,
@@ -49,8 +52,14 @@ def record_dispatch(*, backend: str, m_total: int, n: int, k: int,
         "tile": dict(tile),
         "planes_live": int(planes_live),
         "planes_total": int(planes_total),
+        # per-request batches (shared_sequence=False) pay per-sequence
+        # setup b times; the setup/stream attribution seconds are the
+        # penalty-free per-term split from registry.cost_components
+        "shared_sequence": bool(shared_sequence),
         "predicted_flops": float(predicted_flops),
         "predicted_bytes": float(predicted_bytes),
+        "predicted_setup_s": float(predicted_setup_s),
+        "predicted_stream_s": float(predicted_stream_s),
         "predicted_s": float(predicted_s),
         "measured_s": float(measured_s),
         "model_fraction": float(frac),
@@ -81,6 +90,7 @@ def snapshot() -> dict:
         a = agg.setdefault(r["backend"], {
             "dispatches": 0, "planes_live": 0, "planes_total": 0,
             "predicted_flops": 0.0, "predicted_bytes": 0.0,
+            "predicted_setup_s": 0.0, "predicted_stream_s": 0.0,
             "predicted_s": 0.0, "measured_s": 0.0,
         })
         a["dispatches"] += 1
@@ -88,10 +98,17 @@ def snapshot() -> dict:
         a["planes_total"] += r["planes_total"]
         a["predicted_flops"] += r["predicted_flops"]
         a["predicted_bytes"] += r["predicted_bytes"]
+        a["predicted_setup_s"] += r.get("predicted_setup_s", 0.0)
+        a["predicted_stream_s"] += r.get("predicted_stream_s", 0.0)
         a["predicted_s"] += r["predicted_s"]
         a["measured_s"] += r["measured_s"]
     for a in agg.values():
         a["model_fraction"] = (a["predicted_s"] / a["measured_s"]
                                if a["measured_s"] > 0.0 else 0.0)
+        split = a["predicted_setup_s"] + a["predicted_stream_s"]
+        # share of the modeled (penalty-free) time spent on per-sequence
+        # setup: ~1 flags a backend rebuilding factors per request
+        a["setup_fraction"] = (a["predicted_setup_s"] / split
+                               if split > 0.0 else 0.0)
     return {"dispatches": recs,
             "by_backend": {k: agg[k] for k in sorted(agg)}}

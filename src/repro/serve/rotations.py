@@ -358,9 +358,13 @@ class RotationService:
         if plan is not None:
             obs.inc("serve.warm_plans")
         else:
+            # shared_sequence=False: a bucket batch carries one distinct
+            # sequence per slot, so the registry prices per-sequence
+            # setup × slots — the correction that lets method="auto"
+            # avoid setup-heavy backends on serving traffic
             plan = rep_seq.plan(like=like, method=self.method,
                                 autotune=self.autotune, batch=self.slots,
-                                **self.plan_kw)
+                                shared_sequence=False, **self.plan_kw)
             self.stats["plans_resolved"] += 1
             obs.inc("serve.plans_resolved")
             self._warm[key] = plan.to_dict()

@@ -1,69 +1,25 @@
 """repro.serve.stream — async continuous-batching rotation serving.
 
-The paper's amortization thesis (pack many waves per memory pass so the
-cost of touching ``A`` is paid once) has a serving-time analogue: the
-per-request costs — Python admission, dispatch, plan lookup, kernel
-launch — only amortize when requests are batched *continuously*, not in
-synchronous admit-then-drain rounds.  :class:`StreamEngine` is that
-layer: an asynchronous engine on top of
-:class:`~repro.serve.rotations.RotationService`'s shape buckets.
+:class:`StreamEngine` puts two daemon threads (scheduler + dispatcher)
+around a depth-1 handoff queue on top of
+:class:`~repro.serve.rotations.RotationService`'s shape buckets:
+``submit()`` admits requests without touching JAX, buckets close on an
+adaptive size-or-age policy priced by the §6 cost model, and closed
+batches execute through the exact synchronous batch path — so streamed
+results are bit-equal to a synchronous drain while host assembly
+double-buffers against device execution.  Buckets are per-request
+batches (one sequence per slot), so their plans are priced with
+``shared_sequence=False`` — the serving-aware cost model that lets
+``method="auto"`` run streaming workloads unpinned.  Backpressure
+(``block``/``fail``/``shed``), deadlines, and every counter are
+explicit; analyzer rule RA204 confines thread/queue primitives to this
+module.
 
-Architecture — two daemon threads around a depth-1 handoff queue:
-
-* **submit (caller threads)** — :meth:`StreamEngine.submit` computes the
-  bucket key, applies the backpressure policy against a bounded global
-  pending budget, appends a :class:`StreamTicket` to the bucket's queue,
-  and returns immediately.  No JAX work and no
-  ``jax.block_until_ready`` ever happens on the admission path.
-* **scheduler thread** — closes buckets on an adaptive size-*or*-age
-  policy: a bucket closes the moment it holds ``slots`` requests, *or*
-  when its oldest pending request's age exceeds the bucket's target —
-  ``age_factor`` × the §6 cost model's estimated batch seconds for that
-  bucket's frozen plan (clamped to ``[min_age_s, max_age_s]``;
-  ``min_age_s`` before the bucket is first planned).  Ready buckets are
-  served **weighted round-robin**: a rotating ring position guarantees
-  every ready bucket is visited once per cycle (no starvation), and a
-  bucket gets up to ``ceil(pending/slots)`` consecutive closes per
-  visit, capped at ``max_burst`` (hot buckets drain faster without
-  monopolizing the device).  The scheduler also pops tickets,
-  wave-normalizes them, and assembles the next batch *while the
-  dispatcher executes the previous one*.
-* **dispatcher thread** — pulls closed batches from the depth-1 handoff
-  queue and runs :meth:`RotationService.execute_batch` — literally the
-  same assembly/planning/``apply_batched`` code path as a synchronous
-  drain, which is what makes streamed results **bit-equal** to
-  synchronous ``RotationService`` results for plain, signed, and
-  reflector sequences.  Tickets are fulfilled with lazily-sliced
-  asynchronous device values: the depth-1 queue plus JAX's async
-  dispatch double-buffers host assembly against device execution.
-
-Backpressure is explicit and policy-selectable (``backpressure=``):
-
-* ``"block"`` — ``submit()`` waits until the pending budget has room;
-* ``"fail"`` — ``submit()`` raises :class:`Backpressure` immediately;
-* ``"shed"`` — ``submit()`` first sheds queued requests whose deadline
-  already passed (their tickets raise :class:`DeadlineExceeded`), then
-  admits if that made room, else raises :class:`Backpressure`.
-
-Every decision is counted through :mod:`repro.obs`
-(``serve.stream.{submitted,completed,shed,rejected,block_waits}``,
-``serve.stream.closes_{size,age,drain}``, a ``serve.stream.pending``
-gauge) and request latency feeds the same
-``serve.request_latency_seconds`` admit→fulfill histogram the
-synchronous service uses, so the bench row's p50/p99 are comparable.
-
-Plan discipline is inherited, not reimplemented: the engine owns a
-private ``RotationService``, so each bucket is planned **exactly once**
-(on its first dispatched batch, warm-started from the serialized
-serve-plan store when available) and only the dispatcher thread ever
-touches plan state.  :meth:`close` (or the context manager) drains every
-queued request through the normal batch path before the threads exit.
-
-Analyzer rule RA204 pins this module's discipline statically: thread
-and queue primitives are confined here (the engine is the one
-concurrent component of the serving stack), and the engine itself may
-not import ``repro.core``/``repro.kernels`` machinery — execution flows
-only through the service's bucket internals.
+The full design — bucket lifecycle, warm plans, backpressure and
+deadline semantics, close policy — is documented in
+``docs/serving.md``; ``docs/architecture.md`` places this module in the
+registry → sequence → serve → stream layer diagram, and
+``docs/cost-model.md`` derives the per-request bucket pricing.
 """
 from __future__ import annotations
 

@@ -1,0 +1,34 @@
+# repro-lint: fixture-as=src/repro/serve/bad_pricing.py
+"""RA205 fixture: batched Problem priced without saying who owns the
+sequence.
+
+A serving-layer helper that builds a ``Problem(batch=64)`` straight
+from bucket geometry inherits ``shared_sequence=True`` and tells the
+cost model the per-sequence setup is paid once — for a per-request
+bucket it is paid 64 times, which is exactly the mispricing that made
+``method="auto"`` lose to a pinned kernel on streaming traffic.
+"""
+from repro.core.registry import Problem
+from repro.core import registry
+
+
+def bad_bucket_pricing(m, n, k, b):
+    return Problem(m=m, n=n, k=k, dtype="float32",  # expect: RA205
+                   platform="cpu", batch=b)
+
+
+def bad_qualified_pricing(m, n, k):
+    return registry.Problem(m=m, n=n, k=k,  # expect: RA205
+                            dtype="float32", platform="cpu", batch=64)
+
+
+def fine_unit_batch(m, n, k):
+    # literally batch=1 — shared vs per-request is the same price
+    return Problem(m=m, n=n, k=k, dtype="float32",
+                   platform="cpu", batch=1)
+
+
+def fine_explicit(m, n, k, b):
+    # the flag is spelled, whichever value the caller means
+    return Problem(m=m, n=n, k=k, dtype="float32",
+                   platform="cpu", batch=b, shared_sequence=False)

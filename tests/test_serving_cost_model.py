@@ -1,0 +1,166 @@
+"""Serving-aware cost model: per-request vs shared-sequence batches.
+
+The acceptance bucket throughout is the serving benchmark's
+(m=16, n=32) shape with requests recorded at k_req=5 and padded to
+k_pad=8, so ``live_planes = 31*5 = 155`` of ``planes_total = 31*8 =
+248``.  The expected backend flips are the ones docs/cost-model.md
+derives; they are pure cost-model arithmetic (no autotune, no JAX
+dispatch), so the assertions are exact, not statistical.
+"""
+import dataclasses as _dc
+
+import pytest
+
+from repro.core import registry
+from repro.core.registry import (Plan, Problem, clear_plan_cache,
+                                 cost_components, select_plan)
+
+M, N, K_PAD, LIVE = 16, 32, 8, 155
+
+
+def _bucket_plan(batch, shared, platform):
+    return select_plan(M, N, K_PAD, dtype="float32", platform=platform,
+                       batch=batch, shared_sequence=shared,
+                       live_planes=LIVE)
+
+
+# --------------------------------------------------------------- the flip
+def test_batch_one_ignores_the_flag():
+    clear_plan_cache()
+    a = _bucket_plan(1, True, "tpu")
+    clear_plan_cache()
+    b = _bucket_plan(1, False, "tpu")
+    assert a == b  # normalized to the shared (legacy) key and plan
+
+
+@pytest.mark.parametrize("batch", [8, 64])
+def test_per_request_bucket_flips_to_fused_on_tpu(batch):
+    clear_plan_cache()
+    shared = _bucket_plan(batch, True, "tpu")
+    per_req = _bucket_plan(batch, False, "tpu")
+    assert per_req.method == "rotseq_batched", per_req
+    assert shared.method != "rotseq_batched", shared
+
+
+def test_per_request_bucket_never_plans_accumulated_on_cpu():
+    clear_plan_cache()
+    shared = _bucket_plan(64, True, "cpu")
+    per_req = _bucket_plan(64, False, "cpu")
+    # shared amortizes the Q_t build and wins on the GEMM path; paying
+    # it 64x prices accumulated out entirely for the per-request twin
+    assert shared.method == "accumulated", shared
+    assert per_req.method != "accumulated", per_req
+
+
+# --------------------------------------------------- components arithmetic
+def _prob(shared):
+    return Problem(m=M, n=N, k=K_PAD, dtype="float32", platform="cpu",
+                   batch=64, shared_sequence=shared, live_planes=LIVE)
+
+
+@pytest.mark.parametrize("method,plan", [
+    ("accumulated", Plan("accumulated", n_b=32, k_b=8)),
+    ("blocked", Plan("blocked", n_b=32, k_b=8)),
+    ("rotseq_batched", Plan("rotseq_batched", m_blk=16)),
+    ("wavefront", Plan("wavefront")),
+])
+def test_split_sums_to_totals(method, plan):
+    c = cost_components(method, _prob(False), plan)
+    assert c["flops"] == c["setup"]["flops"] + c["stream"]["flops"]
+    assert c["bytes"] == c["setup"]["bytes"] + c["stream"]["bytes"]
+
+
+def test_per_request_setup_scales_with_batch():
+    plan = Plan("accumulated", n_b=32, k_b=8)
+    shared = cost_components("accumulated", _prob(True), plan)
+    per_req = cost_components("accumulated", _prob(False), plan)
+    # setup x64, stream identical
+    assert per_req["setup"]["flops"] == 64 * shared["setup"]["flops"]
+    assert per_req["setup"]["bytes"] == 64 * shared["setup"]["bytes"]
+    assert per_req["stream"] == shared["stream"]
+
+
+def test_fused_kernel_price_is_ownership_flat():
+    plan = Plan("rotseq_batched", m_blk=16)
+    shared = cost_components("rotseq_batched", _prob(True), plan)
+    per_req = cost_components("rotseq_batched", _prob(False), plan)
+    # the kernel re-reads the panel per batch element either way
+    assert shared == per_req
+
+
+def test_modeled_prediction_cliff_is_at_least_5x():
+    # the serve/prediction_cliff bench row, as a unit test: penalty-free
+    # setup+stream attribution, accumulated vs fused at batch 64
+    acc = cost_components("accumulated", _prob(False),
+                          Plan("accumulated", n_b=32, k_b=8))
+    fused = cost_components("rotseq_batched", _prob(False),
+                            Plan("rotseq_batched", m_blk=16))
+    acc_s = acc["setup"]["seconds"] + acc["stream"]["seconds"]
+    fused_s = fused["setup"]["seconds"] + fused["stream"]["seconds"]
+    assert acc_s / fused_s >= 5.0
+
+
+# ------------------------------------------------------------- cache keys
+def test_per_request_key_is_distinct_and_round_trips(tmp_path):
+    clear_plan_cache()
+    shared = _bucket_plan(64, True, "tpu")
+    per_req = _bucket_plan(64, False, "tpu")
+    keys = [k for k in registry._PLAN_CACHE
+            if k[:3] == (M, N, K_PAD) and "per_req" in k]
+    assert len(keys) == 1
+    (pkey,) = keys
+    assert registry._PLAN_CACHE[pkey] == per_req
+    assert per_req != shared
+
+    # round-trip through the persisted store: the marker must survive
+    # JSON (lists -> tuples) and come back as the same class
+    registry._PLAN_CACHE[pkey] = _dc.replace(per_req, source="measured")
+    path = str(tmp_path / "plans.json")
+    assert registry.save_plan_cache(path) == path
+    clear_plan_cache()
+    assert registry.load_plan_cache(path) >= 1
+    restored = registry._PLAN_CACHE[pkey]
+    assert restored.method == per_req.method
+    assert restored.source == "persisted"
+    # and select_plan finds it as a hit, not a re-resolution
+    assert _bucket_plan(64, False, "tpu") == restored
+
+
+def test_batch_one_shares_the_legacy_key():
+    clear_plan_cache()
+    _bucket_plan(1, False, "tpu")
+    assert all("per_req" not in k for k in registry._PLAN_CACHE)
+
+
+# ---------------------------------------------------------- interpolation
+def _seed_measured(batch, shared, method):
+    """Plant a measured plan for the acceptance bucket in the cache."""
+    prob = Problem(m=M, n=N, k=K_PAD, dtype="float32", platform="tpu",
+                   batch=batch, shared_sequence=shared, live_planes=LIVE)
+    key = registry._plan_key(prob)
+    registry._PLAN_CACHE[key] = Plan(method=method, est_seconds=1e-6,
+                                     source="measured")
+
+
+def test_interpolation_never_crosses_the_ownership_class():
+    # a measured per-request plan at distance 0 must NOT be borrowed by
+    # the shared twin (and vice versa): the classes differ like dense
+    # vs live-annotated
+    clear_plan_cache()
+    _seed_measured(64, False, "unoptimized")
+    shared = _bucket_plan(64, True, "tpu")
+    assert shared.source == "model"
+
+    clear_plan_cache()
+    _seed_measured(64, True, "accumulated")
+    per_req = _bucket_plan(64, False, "tpu")
+    assert per_req.source == "model"
+
+
+def test_interpolation_transfers_within_the_per_request_class():
+    clear_plan_cache()
+    _seed_measured(64, False, "rotseq_batched")
+    near = select_plan(M, N, K_PAD, dtype="float32", platform="tpu",
+                       batch=32, shared_sequence=False, live_planes=LIVE)
+    assert near.source == "interpolated"
+    assert near.method == "rotseq_batched"

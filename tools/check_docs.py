@@ -1,0 +1,81 @@
+"""Dead-link check for the docs tree (stdlib-only; runs in the CI lint
+job, which installs no project dependencies).
+
+Scans ``docs/*.md`` and ``README.md`` for Markdown links and fails on
+any *relative* target that does not exist on disk.  External schemes
+(``http(s)``, ``mailto``) and pure in-page anchors are skipped; a
+``path#anchor`` target is checked for the path only — anchor text is
+renderer-specific and not worth pinning.
+
+Usage::
+
+  python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline links [text](target); images ![alt](target) match too via the
+# same suffix.  Angle-bracketed targets <...> are unwrapped below.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: str) -> list:
+    out = []
+    readme = os.path.join(root, "README.md")
+    if os.path.exists(readme):
+        out.append(readme)
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for fn in sorted(os.listdir(docs)):
+            if fn.endswith(".md"):
+                out.append(os.path.join(docs, fn))
+    return out
+
+
+def check_file(path: str) -> list:
+    """(line, target, reason) for every dead relative link in one file."""
+    bad = []
+    base = os.path.dirname(path)
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for m in _LINK_RE.finditer(line):
+                target = m.group(1).strip("<>")
+                if not target or target.startswith("#"):
+                    continue
+                if target.startswith(_SKIP_SCHEMES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = os.path.normpath(os.path.join(base, rel))
+                if not os.path.exists(resolved):
+                    bad.append((lineno, target, resolved))
+    return bad
+
+
+def main(argv) -> int:
+    root = argv[1] if len(argv) > 1 else "."
+    files = doc_files(root)
+    if not files:
+        print(f"docs-check: no Markdown files found under {root!r}")
+        return 1
+    failures = 0
+    for path in files:
+        for lineno, target, resolved in check_file(path):
+            rel = os.path.relpath(path, root)
+            print(f"{rel}:{lineno}: dead relative link ({target}) — "
+                  f"{resolved} does not exist")
+            failures += 1
+    if failures:
+        print(f"docs-check: {failures} dead link(s)")
+        return 1
+    print(f"docs-check: {len(files)} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
