@@ -7,12 +7,10 @@
 # the full test suite runs.  The analyzer replaced the four grep gates
 # (compat/eig/seq/serve): it resolves import aliases, walks pallas_call
 # kernel bodies, and suppresses via `# repro-lint: disable=RAx` — see
-# `python -m repro.analysis --list-rules`.  The old gate targets remain
-# below as thin aliases for one release.
+# `python -m repro.analysis --list-rules`.
 
-.PHONY: check lint analyze ruff docs-check test compat-gate eig-gate \
-	seq-gate serve-gate smoke bench bench-artifacts bench-compare \
-	obs-report
+.PHONY: check lint analyze ruff docs-check test smoke bench \
+	bench-artifacts bench-compare obs-report
 
 check: lint test
 
@@ -49,22 +47,6 @@ PYTEST_PAR := $(shell python -c 'import xdist' 2>/dev/null && echo '-n auto')
 test:
 	PYTHONPATH=src python -m pytest -q --maxfail=1 $(PYTEST_PAR)
 
-# ---------------------------------------------------------------------------
-# Deprecated gate aliases (one release): each now runs the analyzer
-# rule family that subsumes it.  The AST rules are strictly stronger —
-# e.g. seq-gate's regex missed `from repro.core.api import
-# apply_rotation_sequence as _ars` (see
-# tests/analysis_fixtures/ra201_aliased_import.py); RA201 does not.
-# ---------------------------------------------------------------------------
-
-compat-gate:
-	@echo 'compat-gate is deprecated: running analyzer family RA1'
-	PYTHONPATH=src python -m repro.analysis --rules RA1
-
-eig-gate seq-gate serve-gate:
-	@echo '$@ is deprecated: running analyzer family RA2'
-	PYTHONPATH=src python -m repro.analysis --rules RA2
-
 smoke:
 	PYTHONPATH=src:. python benchmarks/run.py --only smoke
 
@@ -76,6 +58,7 @@ bench-artifacts:
 	PYTHONPATH=src:. python benchmarks/run.py --only smoke --json BENCH_smoke.json
 	PYTHONPATH=src:. python benchmarks/bench_eig.py --quick --json BENCH_eig.json
 	PYTHONPATH=src:. python benchmarks/run.py --only serve --json BENCH_serve.json
+	PYTHONPATH=src:. python benchmarks/bench_dist.py --quick --json BENCH_dist.json
 
 # Fails when a tracked metric (counts exactly; interpret-mode rates by
 # >30%) regresses vs benchmarks/baselines/bench_baseline.json.
@@ -85,7 +68,7 @@ bench-artifacts:
 bench-compare:
 	PYTHONPATH=src:. python benchmarks/compare_baseline.py \
 		--baseline benchmarks/baselines/bench_baseline.json \
-		BENCH_smoke.json BENCH_eig.json BENCH_serve.json
+		BENCH_smoke.json BENCH_eig.json BENCH_serve.json BENCH_dist.json
 
 # Observability report: obs-enabled rotation-serving runs writing the
 # metrics + roofline snapshot (OBS_metrics.json) and a Perfetto-loadable

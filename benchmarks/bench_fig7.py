@@ -16,7 +16,7 @@ _CODE = """
 import numpy as np, jax, jax.numpy as jnp
 from repro.obs import timing
 from repro.core.rotations import random_sequence
-from repro.core.distributed import (rot_sequence_row_sharded,
+from repro.dist import (rot_sequence_row_sharded,
     rot_sequence_column_sharded_padded, column_sharded_comm_bytes)
 
 D = {D}

@@ -119,6 +119,28 @@ SPEC = {
     # drift like every other wall-clock serving row.
     "serve/stream:latency_p99_ms": dict(higher_is_better=False,
                                         rel_tol=0.50, warn_only=True),
+    # sharded-fused vs replicated bucket execution on the forced
+    # 8-device host mesh (PR 10).  Gating, with a deliberately lenient
+    # abs_floor: CPU host "devices" are threads sharing one socket, so
+    # the bar is "sharded execution stays in its performance class"
+    # (>= 0.2x replicated), not a real multi-chip speedup.
+    "dist/sharded_vs_replicated:speedup": dict(higher_is_better=True,
+                                               rel_tol=0.50,
+                                               abs_floor=0.2),
+    # count-based acceptance invariants: exactly one planned launch per
+    # shard, and bit-identical output vs the replicated batched path.
+    "dist/sharded_vs_replicated:launches_per_shard": dict(
+        higher_is_better=False, rel_tol=0.0, count=True),
+    "dist/sharded_vs_replicated:parity": dict(higher_is_better=True,
+                                              rel_tol=0.0, count=True),
+    # comm-extended cost-model context rows (deterministic arithmetic,
+    # warn-only so model retunes surface without gating unrelated PRs):
+    # modeled inter-device bytes for the benchmark dispatch, and the
+    # modeled replicated/sharded crossover ratio at the same shape.
+    "dist/comm_model:comm_bytes": dict(higher_is_better=False,
+                                       rel_tol=0.10, warn_only=True),
+    "dist/comm_model:modeled_crossover_ratio": dict(
+        higher_is_better=True, rel_tol=0.30, warn_only=True),
 }
 
 

@@ -450,6 +450,86 @@ class RA205SilentSharedSequenceDefault(Rule):
                     "say shared_sequence=True/False explicitly")
 
 
+class RA206SpmdConfinement(Rule):
+    """SPMD primitive outside the dist layer, or dist importing kernels.
+
+    Incident (PR 10): the distributed path became a first-class plan
+    (``repro.dist``) precisely so that sharded execution flows through
+    the same registry arbitration, plan cache, and obs attribution as
+    everything else.  Two confinements keep it that way:
+
+    * SPMD collectives and mesh primitives (``shard_map``,
+      ``ppermute``, ``axis_index``, ``psum``, ``all_gather``, …) live
+      only in ``repro.dist`` / ``repro.parallel`` / ``repro.compat``
+      (the version shim that *defines* the ``shard_map`` spelling).  A
+      stray collective elsewhere is a second distribution path the
+      comm-extended cost model cannot see.
+    * ``repro.dist`` itself never imports ``repro.kernels.*`` — every
+      shard executes through the planned :mod:`repro.core.sequence`
+      hooks (``planned_apply`` / ``planned_apply_batched``), so a
+      sharded dispatch cannot dodge the registry's SMEM/VMEM budget
+      guard or launch accounting.  ``repro.kernels.limits`` stays
+      importable (pure host arithmetic, same carve-out as RA203).
+    """
+
+    id = "RA206"
+    title = "SPMD primitive outside repro.dist, or dist importing kernels"
+
+    ALLOWED = ("repro.dist", "repro.parallel", "repro.compat")
+    DIST = "repro.dist"
+    SPMD_NAMES = {"shard_map", "ppermute", "axis_index", "psum", "pmean",
+                  "all_gather", "psum_scatter", "all_to_all", "pshuffle"}
+    KERNEL_PREFIX = "repro.kernels"
+    KERNEL_CARVE_OUTS = ("repro.kernels.limits",)
+
+    def _spmd(self, dotted: str) -> bool:
+        if dotted.rsplit(".", 1)[-1] not in self.SPMD_NAMES:
+            return False
+        return dotted.startswith(("jax.", "repro.compat."))
+
+    def _kernel(self, dotted: str) -> bool:
+        if any(dotted == c or dotted.startswith(c + ".")
+               for c in self.KERNEL_CARVE_OUTS):
+            return False
+        return (dotted == self.KERNEL_PREFIX
+                or dotted.startswith(self.KERNEL_PREFIX + "."))
+
+    def check(self, mi: ModuleInfo) -> Iterable[Violation]:
+        if not _in_repro(mi):
+            return
+        if mi.module == self.DIST or mi.module.startswith(self.DIST + "."):
+            for line, target in mi.import_targets:
+                if self._kernel(target):
+                    yield Violation(
+                        self.id, mi.logical, line,
+                        f"kernel import '{target}' in repro.dist; shards "
+                        f"execute through the planned repro.core.sequence "
+                        f"hooks only")
+            for node, dotted in mi.references():
+                if self._kernel(dotted):
+                    yield self.hit(
+                        mi, node,
+                        f"kernel reference '{dotted}' in repro.dist; "
+                        f"shards execute through the planned "
+                        f"repro.core.sequence hooks only")
+            return
+        if any(mi.module == a or mi.module.startswith(a + ".")
+               for a in self.ALLOWED):
+            return
+        for line, target in mi.import_targets:
+            if self._spmd(target):
+                yield Violation(
+                    self.id, mi.logical, line,
+                    f"SPMD primitive import '{target}' outside repro.dist; "
+                    f"distribution goes through repro.dist plans")
+        for node, dotted in mi.references():
+            if self._spmd(dotted):
+                yield self.hit(
+                    mi, node,
+                    f"SPMD primitive '{dotted}' outside repro.dist; "
+                    f"distribution goes through repro.dist plans")
+
+
 # --------------------------------------------------------------------------
 # RA3xx — bitwise contract
 # --------------------------------------------------------------------------
@@ -970,6 +1050,7 @@ ALL_RULES: Tuple[type, ...] = (
     RA203TypedLayerOnly,
     RA204StreamConcurrencyDiscipline,
     RA205SilentSharedSequenceDefault,
+    RA206SpmdConfinement,
     RA301InlinePlaneStencil,
     RA302FoldableSignLiteral,
     RA401KernelHostRoundTrip,

@@ -9,7 +9,7 @@ Resolved surfaces, spanning JAX 0.4.x -> 0.5.x+ and nightlies:
 
 * :func:`shard_map` — ``jax.shard_map`` (0.5+) vs
   ``jax.experimental.shard_map.shard_map`` (0.4.x, with ``check_rep``
-  disabled: the pipelined collectives in ``core.distributed`` are not
+  disabled: the pipelined collectives in ``repro.dist`` are not
   replication-inferable on the old checker).
 * :func:`varying_axes` / :func:`pvary` / :func:`pvary_like` — the
   varying-manual-axes ("vma") type system.  Nightlies track which mesh
@@ -79,7 +79,7 @@ def shard_map(f, *, mesh, in_specs, out_specs):
     from jax.experimental.shard_map import shard_map as _shard_map
 
     # check_rep=False: the 0.4.x replication checker rejects the manual
-    # ppermute pipelines in core.distributed (same semantics either way).
+    # ppermute pipelines in repro.dist (same semantics either way).
     return _shard_map(
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=False,

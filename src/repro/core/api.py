@@ -29,7 +29,7 @@ Deprecation policy: the raw-array kwargs that duplicate
 ``DeprecationWarning`` and will be removed once external callers have
 migrated; plain ``(A, C, S)`` positional calls remain supported as the
 compatibility surface.  Internal ``src/repro`` code must construct
-``RotationSequence`` objects instead — ``make seq-gate`` and the
+``RotationSequence`` objects instead — analyzer rule RA201 and the
 ``pytest.ini`` DeprecationWarning-to-error filter (scoped to warnings
 originating from ``repro.*`` frames) enforce it.
 """
@@ -159,13 +159,15 @@ registry.register(BackendSpec(
 # seq.T identity padding.  batch_via="fused" makes apply_batched hand it
 # the whole (b, m, n) stack (shared or per-request waves) in one call;
 # per-request vmap/loop stays available as the fallback capability on
-# every other backend.
+# every other backend.  supports_sharding: the launch is pure per-shard
+# work (rows are independent under column-pair rotations), so
+# repro.dist runs exactly one of these launches per shard_map shard.
 registry.register(BackendSpec(
     name="rotseq_batched",
     fn=_run_rotseq_batched,
     capability=Capability(platforms=("tpu",), tile_min=(2, 1),
                           needs_pallas=True, supports_vmap=False,
-                          batch_via="fused"),
+                          supports_sharding=True, batch_via="fused"),
     cost=registry.cost_rotseq_batched,
     candidates=registry.rotseq_batched_tiles,
     doc="Fused multi-request Pallas kernel (one launch per bucket, "

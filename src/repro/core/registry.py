@@ -93,6 +93,12 @@ class Problem:
     # backends (rotseq_batched) can exploit — their cost scales with
     # live_planes while every other backend pays the full grid.
     live_planes: Optional[int] = None
+    # mesh size of a sharded execution (repro.dist): shape fields above
+    # stay *global* — per-shard row counts and the inter-device
+    # communication term are derived from ``devices`` in the cost
+    # models, never baked into ``m``.  Meaningful only with
+    # ``sharded=True``; ``devices=1`` keeps every existing cost exact.
+    devices: int = 1
 
     @property
     def itemsize(self) -> int:
@@ -265,6 +271,61 @@ def _split(setup_flops=0.0, setup_bytes=0.0,
             "stream_bytes": float(stream_bytes)}
 
 
+# ---------------------------------------------------------------------------
+# inter-device communication term (repro.dist sharded executions)
+# ---------------------------------------------------------------------------
+#
+# Row-sharded application (the ShardedSequencePlan fused path) keeps the
+# rows of every shard independent — rotations act on column *pairs* — so
+# the only wire traffic is replicating the C/S/G wave panels to every
+# shard once per plan (a setup-side cost, per the PR 9 split).  The
+# stream side of the wire is zero for row sharding; the CAQR-style
+# column-panel path prices its per-panel boundary exchange separately in
+# ``repro.dist.column_sharded_comm_bytes``.  A per-hop latency constant
+# keeps tiny sharded problems from reading as free: broadcasting to D
+# devices costs ~log2(D) link round-trips regardless of payload, which
+# is exactly what makes ``method="auto"`` keep small-n problems
+# replicated while large-n problems amortize the wire and go sharded.
+
+_LINK_HOP_LATENCY = 5e-6
+
+
+def _comm_components(p: Problem) -> Dict[str, float]:
+    """Wire traffic + seconds of one sharded application (zero at D=1).
+
+    ``setup_bytes`` is the wave-panel broadcast — 3 planes arrays
+    (C/S/G) per *distinct* sequence, ``devices - 1`` copies leaving the
+    source shard; ``stream_bytes`` is zero for the row-sharded fused
+    path.  ``seconds`` prices the bytes at ``Hardware.link_bw`` plus
+    ``ceil(log2(D))`` per-hop latencies.
+    """
+    D = max(1, p.devices)
+    if not p.sharded or D <= 1:
+        return {"setup_bytes": 0.0, "stream_bytes": 0.0, "bytes": 0.0,
+                "hops": 0.0, "seconds": 0.0}
+    panel = 3.0 * p.sequences * p.planes_total * p.itemsize
+    setup_bytes = panel * (D - 1)
+    hops = float(math.ceil(math.log2(D)))
+    secs = setup_bytes / p.hardware.link_bw + hops * _LINK_HOP_LATENCY
+    return {"setup_bytes": setup_bytes, "stream_bytes": 0.0,
+            "bytes": setup_bytes, "hops": hops, "seconds": secs}
+
+
+def _dist_terms(p: Problem) -> Tuple[float, float]:
+    """``(stream_divisor, comm_seconds)`` of the problem's mesh.
+
+    Per-row stream work divides across ``devices`` shards (each shard
+    owns ``m_total / D`` rows); per-sequence setup work is replicated —
+    every shard packs/accumulates the full sequence locally — so setup
+    terms never divide.  The returned comm seconds are *additive* on
+    top of the per-shard roofline.
+    """
+    D = max(1, p.devices)
+    if not p.sharded or D <= 1:
+        return 1.0, 0.0
+    return float(D), _comm_components(p)["seconds"]
+
+
 def _components_unoptimized(p: Problem, plan: Plan) -> Dict[str, float]:
     # Alg 1.2 touches nothing per-sequence beyond the C/S panel itself,
     # which is dominated by its 4-memop-per-rotation streaming.
@@ -276,8 +337,9 @@ def cost_unoptimized(p: Problem, plan: Plan) -> float:
     """Alg 1.2: 4 memops per rotation, no reuse (paper SS6 baseline)."""
     hw = p.hardware
     c = _components_unoptimized(p, plan)
-    return _roofline_seconds(c["stream_flops"] / hw.vpu_flops,
-                             c["stream_bytes"] / hw.hbm_bw)
+    D, comm_s = _dist_terms(p)
+    return _roofline_seconds(c["stream_flops"] / hw.vpu_flops / D,
+                             c["stream_bytes"] / hw.hbm_bw / D) + comm_s
 
 
 def _components_wavefront(p: Problem, plan: Plan) -> Dict[str, float]:
@@ -289,8 +351,9 @@ def cost_wavefront(p: Problem, plan: Plan) -> float:
     """Alg 1.3: wavefront fuses column touches to ~2 memops/rotation."""
     hw = p.hardware
     c = _components_wavefront(p, plan)
-    return _roofline_seconds(c["stream_flops"] / hw.vpu_flops,
-                             c["stream_bytes"] / hw.hbm_bw)
+    D, comm_s = _dist_terms(p)
+    return _roofline_seconds(c["stream_flops"] / hw.vpu_flops / D,
+                             c["stream_bytes"] / hw.hbm_bw / D) + comm_s
 
 
 def _tile_grid(p: Problem, n_b: int, k_b: int) -> Tuple[int, int, int]:
@@ -329,9 +392,10 @@ def cost_blocked(p: Problem, plan: Plan) -> float:
     """Blocked wavefront: A streams once per band of k_b waves (SS5)."""
     hw = p.hardware
     c = _components_blocked(p, plan)
+    D, comm_s = _dist_terms(p)
     return _roofline_seconds(
-        c["stream_flops"] / hw.vpu_flops,
-        (c["setup_bytes"] + c["stream_bytes"]) / hw.hbm_bw)
+        c["stream_flops"] / hw.vpu_flops / D,
+        (c["setup_bytes"] + c["stream_bytes"] / D) / hw.hbm_bw) + comm_s
 
 
 def _accumulated_flops(p: Problem, n_b: int, k_b: int) -> Tuple[float, float]:
@@ -372,10 +436,12 @@ def cost_accumulated(p: Problem, plan: Plan) -> float:
     """
     hw = p.hardware
     c = _components_accumulated(p, plan)
-    flop_term = (c["stream_flops"] / hw.mxu_flops
+    D, comm_s = _dist_terms(p)
+    flop_term = (c["stream_flops"] / hw.mxu_flops / D
                  + c["setup_flops"] / hw.vpu_flops)
     return _roofline_seconds(
-        flop_term, (c["setup_bytes"] + c["stream_bytes"]) / hw.hbm_bw)
+        flop_term,
+        (c["setup_bytes"] + c["stream_bytes"] / D) / hw.hbm_bw) + comm_s
 
 
 def _interpret_factor(p: Problem) -> float:
@@ -387,9 +453,13 @@ def cost_pallas_wave(p: Problem, plan: Plan) -> float:
 
     ``supports_vmap=False``: a per-request batch runs as ``b`` separate
     launches, so the latency floor multiplies by the sequence count.
+    Comm seconds stay outside the kernel constant and the interpret
+    penalty — the wire is neither fused nor interpreted.
     """
-    return max(0.7 * cost_blocked(p, plan) * _interpret_factor(p),
-               p.sequences * _LATENCY_FLOOR)
+    D, comm_s = _dist_terms(p)
+    return max(0.7 * (cost_blocked(p, plan) - comm_s)
+               * _interpret_factor(p),
+               p.sequences * _LATENCY_FLOOR) + comm_s
 
 
 def cost_pallas_mxu(p: Problem, plan: Plan) -> float:
@@ -397,8 +467,10 @@ def cost_pallas_mxu(p: Problem, plan: Plan) -> float:
 
     Like ``pallas_wave``, per-request batches loop-launch per sequence.
     """
-    return max(0.7 * cost_accumulated(p, plan) * _interpret_factor(p),
-               p.sequences * _LATENCY_FLOOR)
+    D, comm_s = _dist_terms(p)
+    return max(0.7 * (cost_accumulated(p, plan) - comm_s)
+               * _interpret_factor(p),
+               p.sequences * _LATENCY_FLOOR) + comm_s
 
 
 def _components_rotseq_batched(p: Problem, plan: Plan) -> Dict[str, float]:
@@ -426,9 +498,10 @@ def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
     """
     hw = p.hardware
     c = _components_rotseq_batched(p, plan)
+    D, comm_s = _dist_terms(p)
     secs = _roofline_seconds(
-        c["stream_flops"] / hw.vpu_flops,
-        (c["setup_bytes"] + c["stream_bytes"]) / hw.hbm_bw)
+        c["stream_flops"] / hw.vpu_flops / D,
+        (c["setup_bytes"] + c["stream_bytes"] / D) / hw.hbm_bw)
     # On-chip residency bounds, priced out rather than hard-filtered:
     # the (n, m_blk) slab must fit in VMEM for the single-pass
     # assumption to hold, and the scalar-indexed C/S/G panels live in
@@ -443,7 +516,7 @@ def cost_rotseq_batched(p: Problem, plan: Plan) -> float:
     if (p.n * m_blk * p.itemsize > VMEM_SLAB_BUDGET
             or panel_bytes > SMEM_PANEL_BUDGET):
         secs *= 1e3
-    return max(secs * _interpret_factor(p), _LATENCY_FLOOR)
+    return max(secs * _interpret_factor(p), _LATENCY_FLOOR) + comm_s
 
 
 # the setup/stream traffic split behind each cost model, exposed so the
@@ -480,6 +553,11 @@ def cost_components(method: str, problem: Problem,
     attribution seconds (pure traffic over peak rates), so the obs
     roofline ledger — and the bench row that watches the per-request
     accumulated cliff — can attribute ``model_fraction`` per term.
+    Sharded problems (``devices > 1``) additionally carry a ``comm``
+    sub-dict — the wave-panel broadcast bytes and their link-priced
+    seconds (``docs/cost-model.md``, "the communication term"); the
+    attribution ``stream`` seconds are *per-shard* (divided by the mesh
+    size), matching what each device actually streams.
     Pure arithmetic — safe to call from metrics/snapshot paths (RA5).
     """
     spec = get_backend(method)
@@ -487,11 +565,13 @@ def cost_components(method: str, problem: Problem,
     comp_fn = _COMPONENT_FNS.get(method)
     c = comp_fn(problem, plan) if comp_fn is not None else _ZERO_SPLIT
     hw = problem.hardware
+    D, _ = _dist_terms(problem)
+    comm = _comm_components(problem)
     stream_rate = hw.mxu_flops if method in _MXU_STREAM else hw.vpu_flops
     setup_s = (c["setup_flops"] / hw.vpu_flops
                + c["setup_bytes"] / hw.hbm_bw)
     stream_s = (c["stream_flops"] / stream_rate
-                + c["stream_bytes"] / hw.hbm_bw)
+                + c["stream_bytes"] / hw.hbm_bw) / D
     return {
         "flops": float(c["setup_flops"] + c["stream_flops"]),
         "bytes": float(c["setup_bytes"] + c["stream_bytes"]),
@@ -502,6 +582,9 @@ def cost_components(method: str, problem: Problem,
         "stream": {"flops": float(c["stream_flops"]),
                    "bytes": float(c["stream_bytes"]),
                    "seconds": float(stream_s)},
+        "comm": {"bytes": float(comm["bytes"]),
+                 "hops": float(comm["hops"]),
+                 "seconds": float(comm["seconds"])},
     }
 
 
@@ -744,9 +827,19 @@ def _plan_key(problem: Problem) -> tuple:
     with a static live-plane count (padded/staircase sequences, which
     plane-skipping backends price differently) append
     ``("live", count)`` last.
+
+    Sharded problems put ``("sharded", devices)`` in the legacy
+    ``sharded`` slot: the mesh size is part of the eligibility *class*
+    (``_split_key``), so plans never transfer between device counts —
+    or to/from single-device keys, whose slot stays the legacy
+    ``False``.  Sharded plans are never persisted (``select_plan``'s
+    ``can_measure`` excludes them), so the tuple-valued slot never
+    reaches the JSON store.
     """
+    shard = ("sharded", max(1, problem.devices)) if problem.sharded \
+        else False
     base = (problem.m, problem.n, problem.k, problem.dtype,
-            problem.platform, problem.signs, problem.sharded)
+            problem.platform, problem.signs, shard)
     if problem.batch == 1 and problem.live_planes is None:
         return base
     base = base + (problem.batch,)
@@ -964,7 +1057,7 @@ def _measure_plan_per_request(problem: Problem, plan: Plan,
 
 def select_plan(m: int, n: int, k: int, *, dtype="float32",
                 platform: Optional[str] = None, signs: bool = False,
-                sharded: bool = False, batch: int = 1,
+                sharded: bool = False, devices: int = 1, batch: int = 1,
                 shared_sequence: bool = True,
                 live_planes: Optional[int] = None,
                 autotune: bool = False, autotune_top: int = 3) -> Plan:
@@ -992,6 +1085,12 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     planes (``RotationSequence.k_live``): plane-skipping backends price
     padded/staircase grids by their live fraction, so a ``seq.T``
     application plans differently from a dense one of the same shape.
+    ``devices`` is the mesh size of a sharded execution (``devices > 1``
+    implies ``sharded=True``): stream terms divide across shards and
+    the wave-panel broadcast is priced at link bandwidth, so
+    ``method="auto"`` with a mesh genuinely arbitrates sharded-fused vs
+    replicated.  Sharded keys form their own cache class per device
+    count and are never persisted or interpolated across mesh sizes.
 
     Unmeasured shapes first try **cross-shape interpolation**: the
     nearest measured/persisted plan of the same eligibility class
@@ -1008,6 +1107,8 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     platform = platform or compat.default_platform()
     dtype = str(jnp.dtype(dtype))
     batch = max(1, int(batch))
+    devices = max(1, int(devices))
+    sharded = bool(sharded) or devices > 1
     # a batch of one is its own sequence either way: normalize so the
     # legacy cache key (and plan) is shared by both spellings
     shared_sequence = bool(shared_sequence) or batch <= 1
@@ -1021,7 +1122,7 @@ def select_plan(m: int, n: int, k: int, *, dtype="float32",
     problem = Problem(m=m, n=n, k=k, dtype=dtype, platform=platform,
                       signs=signs, sharded=sharded, batch=batch,
                       shared_sequence=shared_sequence,
-                      live_planes=live_planes)
+                      live_planes=live_planes, devices=devices)
     key = _plan_key(problem)
     cached = _PLAN_CACHE.get(key)
     if cached is not None and (not autotune

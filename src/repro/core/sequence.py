@@ -57,7 +57,9 @@ import numpy as np
 from repro import compat, obs
 from repro.core import registry
 
-__all__ = ["RotationSequence", "SequencePlan", "PLAN_DICT_FORMAT"]
+__all__ = ["RotationSequence", "SequencePlan", "PLAN_DICT_FORMAT",
+           "planned_apply", "planned_apply_batched", "planned_run",
+           "stack_request_waves"]
 
 
 # sign value of the unified update ``y' = g * (s x - c y)``
@@ -955,3 +957,56 @@ def _apply_planned_batched_bwd(method, kwargs, reflect, residuals, dY):
 
 _apply_planned_batched.defvjp(_apply_planned_batched_fwd,
                               _apply_planned_batched_bwd)
+
+
+# --------------------------------------------------------------------------
+# shard-local execution hooks (repro.dist)
+# --------------------------------------------------------------------------
+#
+# ``repro.dist`` executes shard-local work through the exact same
+# planned ``custom_vjp`` pair as the single-device paths — called from
+# *inside* ``shard_map``, so gradients flow shard-locally into the
+# transposed-sequence VJP with zero extra collectives (rotations act on
+# column pairs; row shards differentiate independently).  These are the
+# sanctioned planned-execution entry points for the dist layer, which
+# never imports kernel modules directly (analyzer rule RA206).
+
+def planned_apply(method, kwargs, reflect, A, C, S, G):
+    """Planned single-target application (``custom_vjp`` w.r.t. ``A``).
+
+    ``method``/``kwargs``/``reflect`` are the static fields of a
+    resolved :class:`SequencePlan`; ``A`` is a ``(m, n)`` target and
+    ``C``/``S``/``G`` the ``(n-1, k)`` wave arrays (``G`` may be
+    ``None``).
+    """
+    return _apply_planned(method, kwargs, reflect, A, C, S, G)
+
+
+def planned_apply_batched(method, kwargs, reflect, A, C, S, G):
+    """Planned fused batched application (``custom_vjp`` w.r.t. ``A``).
+
+    ``A`` is ``(b, m, n)``; waves are shared ``(n-1, k)`` or stacked
+    ``(b, n-1, k)`` per-request grids (see :func:`stack_request_waves`).
+    """
+    return _apply_planned_batched(method, kwargs, reflect, A, C, S, G)
+
+
+def planned_run(method, kwargs, reflect, A, C, S, G):
+    """Planned application with the backend's *native* autodiff.
+
+    The shard-local analogue of :meth:`SequencePlan.apply_direct` — no
+    ``custom_vjp`` wrapping, so gradients w.r.t. the wave arrays go
+    through the actual computation where the backend supports it.
+    """
+    return _run_backend(method, kwargs, reflect, A, C, S, G)
+
+
+def stack_request_waves(seqs, plan_signed: bool):
+    """Stack ``b`` per-request sequences into ``(b, n-1, k)`` wave arrays.
+
+    The public face of the serving path's stacker for out-of-package
+    batched executors (``repro.dist``): numpy memcpy on the concrete
+    path, ``jnp.stack`` under tracing, implicit-identity signs
+    broadcast only when ``plan_signed``.
+    """
+    return _stack_waves(seqs, plan_signed)

@@ -1,0 +1,68 @@
+"""repro.dist — sharded execution as a first-class plan.
+
+The distributed layer on the plan-once/apply-many spine:
+
+* :func:`plan_sharded` / :class:`ShardedSequencePlan` — resolve mesh +
+  ``PartitionSpec`` + backend once (``method="auto"`` arbitrates
+  sharded-fused vs replicated through the comm-extended §6 cost
+  model), then apply row-sharded ``(m, n)`` and batched ``(b, m, n)``
+  targets with one planned launch per shard under ``shard_map``.
+* :func:`rot_sequence_row_sharded` — one-shot convenience over a fresh
+  row plan (plan-holding callers should keep the plan instead).
+* :mod:`repro.dist.colsharded` — the CAQR-style column-panel pipeline
+  (boundary planes exchanged once per ``k_b``-wave panel) and its
+  live-window-aware :func:`column_sharded_comm_bytes` accounting.
+
+SPMD primitives (``shard_map``, ``ppermute``, ``axis_index``, …) are
+confined to this package (+ ``repro.parallel`` / ``repro.compat``) by
+analyzer rule RA206, which also keeps this layer off direct kernel
+imports — all execution goes through the planned
+:mod:`repro.core.sequence` hooks.
+"""
+from __future__ import annotations
+
+from repro.dist.colsharded import (column_sharded_comm_bytes,
+                                   rot_sequence_column_sharded,
+                                   rot_sequence_column_sharded_padded)
+from repro.dist.plan import (SHARDED_PLAN_DICT_FORMAT, ShardedSequencePlan,
+                             modeled_crossover, plan_sharded)
+
+__all__ = [
+    "ShardedSequencePlan", "plan_sharded", "modeled_crossover",
+    "SHARDED_PLAN_DICT_FORMAT",
+    "rot_sequence_row_sharded",
+    "rot_sequence_column_sharded",
+    "rot_sequence_column_sharded_padded",
+    "column_sharded_comm_bytes",
+]
+
+
+def rot_sequence_row_sharded(A, seq, mesh=None, *, row_axes=("data",),
+                             n_b=None, k_b=None, method: str = "blocked"):
+    """Row-sharded application: zero stream communication (paper SS7).
+
+    One-shot convenience over :func:`plan_sharded` — rows of ``A``
+    shard over ``row_axes``, the sequence replicates, and each shard
+    runs one planned backend call with the backend's native autodiff
+    (matching the historical ``core.distributed`` semantics).  Repeated
+    applications should hold the :class:`ShardedSequencePlan`.
+
+    ``method`` may be any shard_map-capable registry backend or
+    ``"auto"`` (arbitrates sharded vs replicated via the comm-extended
+    cost model).
+    """
+    from repro.core.sequence import RotationSequence
+
+    if not isinstance(seq, RotationSequence):
+        raise TypeError(
+            "rot_sequence_row_sharded(A, seq, mesh) requires a "
+            "RotationSequence; the deprecated raw-array form "
+            "(A, C, S, mesh) was removed — wrap the waves: "
+            "RotationSequence(C, S)")
+    if mesh is None:
+        raise TypeError(
+            "rot_sequence_row_sharded() missing required argument: "
+            "'mesh'")
+    plan = plan_sharded(seq, like=A, mesh=mesh, row_axes=row_axes,
+                        method=method, n_b=n_b, k_b=k_b)
+    return plan.apply(A, direct=True)

@@ -45,13 +45,21 @@ class DelayedRotationBuffer:
         registry cost model + plan cache (once — see ``plan``).
       autotune: measure candidate plans when first resolving the flush
         plan (``auto`` only).
+      mesh: optional ``jax.sharding.Mesh`` — flushes resolve a
+        row-sharded :class:`~repro.dist.ShardedSequencePlan` via
+        :func:`repro.dist.plan_sharded` instead of a replicated
+        ``SequencePlan`` (distributed eigenvector accumulation; the
+        comm-extended cost model arbitrates sharded vs replicated under
+        ``method="auto"``).
+      row_axes: mesh axes the accumulator's rows shard over (with
+        ``mesh``; default ``("data",)``).
       apply_kw: extra plan kwargs (e.g. explicit ``n_b``/``k_b``
         overrides) forwarded to ``RotationSequence.plan``.
     """
 
     def __init__(self, M, *, k_delay: int = 32, method: str = "auto",
                  autotune: bool = False, pad_flush: bool = True,
-                 **apply_kw):
+                 mesh=None, row_axes=("data",), **apply_kw):
         import jax.numpy as jnp
 
         if k_delay < 1:
@@ -64,6 +72,8 @@ class DelayedRotationBuffer:
         self.k_delay = int(k_delay)
         self.method = method
         self.autotune = autotune
+        self.mesh = mesh
+        self.row_axes = tuple(row_axes)
         self.pad_flush = bool(pad_flush)
         self.apply_kw = dict(apply_kw)
         self.planes = self._M.shape[-1] - 1
@@ -164,10 +174,19 @@ class DelayedRotationBuffer:
                     # shared-sequence batch (explicit, so the registry
                     # amortizes per-sequence setup instead of pricing it
                     # per basis like a serving bucket)
-                    plan = seq.plan(like=self._M, method=self.method,
-                                    autotune=self.autotune,
-                                    shared_sequence=True,
-                                    **self.apply_kw)
+                    if self.mesh is not None:
+                        from repro import dist
+
+                        plan = dist.plan_sharded(
+                            seq, like=self._M, mesh=self.mesh,
+                            row_axes=self.row_axes, method=self.method,
+                            autotune=self.autotune, shared_sequence=True,
+                            **self.apply_kw)
+                    else:
+                        plan = seq.plan(like=self._M, method=self.method,
+                                        autotune=self.autotune,
+                                        shared_sequence=True,
+                                        **self.apply_kw)
                     self._plans[plan_key] = plan
                 else:
                     with obs.span("rebind"):
@@ -180,6 +199,9 @@ class DelayedRotationBuffer:
                 # frozen plan.
                 if self._M.ndim == 3:
                     self._M = plan.apply_batched(self._M, direct=True)
+                elif self.mesh is not None:
+                    # ShardedSequencePlan spells direct as a kwarg
+                    self._M = plan.apply(self._M, direct=True)
                 else:
                     self._M = plan.apply_direct(self._M)
                 self._c.clear()

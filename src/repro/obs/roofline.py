@@ -40,7 +40,9 @@ def record_dispatch(*, backend: str, m_total: int, n: int, k: int,
                     predicted_s: float, measured_s: float,
                     predicted_setup_s: float = 0.0,
                     predicted_stream_s: float = 0.0,
-                    shared_sequence: bool = True) -> None:
+                    shared_sequence: bool = True,
+                    comm_bytes: float = 0.0,
+                    launches_per_shard: int = 0) -> None:
     frac = predicted_s / measured_s if measured_s > 0.0 else 0.0
     rec = {
         "backend": backend,
@@ -63,6 +65,11 @@ def record_dispatch(*, backend: str, m_total: int, n: int, k: int,
         "predicted_s": float(predicted_s),
         "measured_s": float(measured_s),
         "model_fraction": float(frac),
+        # sharded dispatches (repro.dist): modeled inter-device traffic
+        # and planned launches per shard (acceptance bar: exactly 1 for
+        # the fused row-sharded path); 0/0 for single-device rows
+        "comm_bytes": float(comm_bytes),
+        "launches_per_shard": int(launches_per_shard),
     }
     with _lock:
         if len(_records) < _MAX_RECORDS:
@@ -92,6 +99,7 @@ def snapshot() -> dict:
             "predicted_flops": 0.0, "predicted_bytes": 0.0,
             "predicted_setup_s": 0.0, "predicted_stream_s": 0.0,
             "predicted_s": 0.0, "measured_s": 0.0,
+            "comm_bytes": 0.0, "launches_per_shard": 0,
         })
         a["dispatches"] += 1
         a["planes_live"] += r["planes_live"]
@@ -102,6 +110,9 @@ def snapshot() -> dict:
         a["predicted_stream_s"] += r.get("predicted_stream_s", 0.0)
         a["predicted_s"] += r["predicted_s"]
         a["measured_s"] += r["measured_s"]
+        a["comm_bytes"] += r.get("comm_bytes", 0.0)
+        a["launches_per_shard"] = max(a["launches_per_shard"],
+                                      r.get("launches_per_shard", 0))
     for a in agg.values():
         a["model_fraction"] = (a["predicted_s"] / a["measured_s"]
                                if a["measured_s"] > 0.0 else 0.0)

@@ -189,6 +189,14 @@ class RotationService:
         :func:`serve_plan_store_path` (which respects
         ``REPRO_PLAN_CACHE=off``), ``False`` disables persistence.
       warm_start: load serialized plans from ``store`` at construction.
+      mesh: optional ``jax.sharding.Mesh`` — bucket plans resolve
+        through :func:`repro.dist.plan_sharded` (row-sharded batched
+        drains; ``method="auto"`` arbitrates sharded vs replicated via
+        the comm-extended cost model).  Sharded bucket plans are
+        process-local: the serialized warm store is bypassed, since a
+        mesh cannot round-trip through JSON.
+      row_axes: mesh axes bucket targets' rows shard over (with
+        ``mesh``; default ``("data",)``).
       plan_kw: extra kwargs forwarded to ``RotationSequence.plan`` when
         a bucket is first resolved (e.g. explicit ``n_b``/``k_b``).
     """
@@ -196,7 +204,7 @@ class RotationService:
     def __init__(self, *, slots: int = 8, method: str = "auto",
                  autotune: bool = False, pad_waves: bool = True,
                  min_k_pad: int = 4, store=None, warm_start: bool = True,
-                 **plan_kw):
+                 mesh=None, row_axes=("data",), **plan_kw):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         self.slots = int(slots)
@@ -204,6 +212,8 @@ class RotationService:
         self.autotune = autotune
         self.pad_waves = bool(pad_waves)
         self.min_k_pad = int(min_k_pad)
+        self.mesh = mesh
+        self.row_axes = tuple(row_axes)
         self.plan_kw = dict(plan_kw)
         if store is False:
             self._store_path = None
@@ -347,6 +357,22 @@ class RotationService:
 
         plan = self._plans.get(key)
         if plan is not None:
+            return plan
+        if self.mesh is not None:
+            # sharded bucket plans resolve per process (no warm store:
+            # a live mesh has no JSON form) — still exactly once per
+            # bucket, rebound on every later drain like the rest
+            from repro import dist
+
+            plan = dist.plan_sharded(rep_seq, like=like, mesh=self.mesh,
+                                     row_axes=self.row_axes,
+                                     method=self.method,
+                                     autotune=self.autotune,
+                                     shared_sequence=False,
+                                     **self.plan_kw)
+            self.stats["plans_resolved"] += 1
+            obs.inc("serve.plans_resolved")
+            self._plans[key] = plan
             return plan
         warm = self._warm.get(key)
         if warm is not None:

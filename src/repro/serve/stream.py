@@ -156,7 +156,9 @@ class StreamEngine:
       start: spawn the scheduler/dispatcher threads immediately
         (``False`` lets tests exercise admission policies inertly).
       service_kw: forwarded to the private ``RotationService`` (e.g.
-        ``store=False``, ``method=...``, ``autotune=True``).
+        ``store=False``, ``method=...``, ``autotune=True``, or
+        ``mesh=``/``row_axes=`` for row-sharded bucket execution via
+        :mod:`repro.dist`).
     """
 
     def __init__(self, service: Optional[RotationService] = None, *,

@@ -1,0 +1,13 @@
+# repro-lint: fixture-as=src/repro/dist/bad_kernel_call.py
+"""RA206 fixture: the dist layer importing a kernel directly.
+
+A shard-local kernel launch dodges the registry's SMEM/VMEM budget
+guard and the launches-per-shard accounting; repro.dist executes only
+through the planned repro.core.sequence hooks.  (RA202 fires too —
+kernel imports are confined to core/api.py tree-wide.)
+"""
+from repro.kernels.rotseq_batched.ops import rot_sequence_batched  # expect: RA206  # expect: RA202
+
+
+def bad_sharded_apply(A, C, S):
+    return rot_sequence_batched(A, C, S)  # expect: RA206  # expect: RA202

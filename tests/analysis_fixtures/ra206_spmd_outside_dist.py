@@ -1,0 +1,18 @@
+# repro-lint: fixture-as=src/repro/serve/bad_spmd.py
+"""RA206 fixture: SPMD primitives outside the dist layer.
+
+A collective issued from the serve layer is a second distribution path
+the comm-extended cost model (and the obs comm-bytes attribution)
+never sees — the incident class PR 10's repro.dist refactor closed.
+"""
+import jax
+
+from jax.lax import ppermute as _pp  # expect: RA206
+
+
+def bad_allreduce(x):
+    return jax.lax.psum(x, "data")  # expect: RA206
+
+
+def bad_halo_exchange(x, perm):
+    return _pp(x, "data", perm)  # expect: RA206

@@ -113,7 +113,7 @@ def test_fixtures_are_skipped_in_tree_walks():
 
 def test_rules_matching_selects_families():
     assert {r.id for r in rules_matching(["RA2"])} == \
-        {"RA201", "RA202", "RA203", "RA204", "RA205"}
+        {"RA201", "RA202", "RA203", "RA204", "RA205", "RA206"}
     assert [r.id for r in rules_matching(["RA301"])] == ["RA301"]
     assert rules_matching(["RA9"]) == []
 

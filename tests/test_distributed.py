@@ -1,5 +1,7 @@
 """Distributed tests run in subprocesses with 8 host devices so the main
-pytest process keeps a single device (the dry-run owns 512)."""
+pytest process keeps a single device (the dry-run owns 512).  Pure
+cost-model/plan-key tests (no mesh needed) run in-process."""
+import math
 import os
 import subprocess
 import sys
@@ -22,11 +24,10 @@ def _run(code: str):
 
 def test_row_and_column_sharded_rotseq():
     out = _run("""
-        import warnings
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.rotations import random_sequence
         from repro.core.ref import rot_sequence_numpy
-        from repro.core.distributed import (rot_sequence_row_sharded,
+        from repro.dist import (rot_sequence_row_sharded,
             rot_sequence_column_sharded_padded)
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         rng = np.random.default_rng(5)
@@ -45,16 +46,24 @@ def test_row_and_column_sharded_rotseq():
             for o in (o1, o2):
                 err = np.abs(np.asarray(o, np.float64) - ref).max()
                 assert err < 1e-4, (m, n, k, method, err)
-        # legacy raw-array signature still works, with a DeprecationWarning
+        # the deprecated raw (A, C, S, mesh) positional form is removed:
+        # passing bare cos arrays is now a plain TypeError, not a warning
         A = rng.standard_normal((8, 32)).astype(np.float32)
         seq = random_sequence(jax.random.key(0), 32, 5)
         ref = rot_sequence_numpy(A, seq.cos, seq.sin)
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            o = rot_sequence_row_sharded(jnp.array(A), seq.cos, seq.sin,
-                                         mesh, n_b=4, k_b=2)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-        assert np.abs(np.asarray(o, np.float64) - ref).max() < 1e-4
+        try:
+            rot_sequence_row_sharded(jnp.array(A), seq.cos, seq.sin,
+                                     mesh, n_b=4, k_b=2)
+        except TypeError:
+            pass  # too many positional arguments
+        else:
+            raise AssertionError("raw (A, C, S, mesh) form must raise")
+        try:
+            rot_sequence_row_sharded(jnp.array(A), seq.cos, mesh=mesh)
+        except TypeError as e:
+            assert "RotationSequence" in str(e), e
+        else:
+            raise AssertionError("raw-array seq must raise TypeError")
         # mesh accepted as a keyword; forgetting it is a clear TypeError
         o = rot_sequence_row_sharded(jnp.array(A), seq, mesh=mesh,
                                      n_b=4, k_b=2)
@@ -68,6 +77,212 @@ def test_row_and_column_sharded_rotseq():
         print("DIST OK")
     """)
     assert "DIST OK" in out
+
+
+def test_core_distributed_compat_wrapper():
+    """repro.core.distributed delegates to repro.dist with a
+    DeprecationWarning and identical results."""
+    out = _run("""
+        import warnings
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.rotations import random_sequence
+        from repro import dist
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(7)
+        A = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+        seq = random_sequence(jax.random.key(3), 32, 5)
+        ref = dist.rot_sequence_row_sharded(A, seq, mesh, n_b=8, k_b=2)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            from repro.core.distributed import rot_sequence_row_sharded
+            o = rot_sequence_row_sharded(A, seq, mesh, n_b=8, k_b=2)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w), \\
+            [x.category for x in w]
+        assert any("repro.dist" in str(x.message) for x in w)
+        assert jnp.array_equal(o, ref)
+        print("COMPAT OK")
+    """)
+    assert "COMPAT OK" in out
+
+
+def test_sharded_fused_parity_and_obs():
+    """Acceptance bar: a batch bucket row-sharded over the forced
+    8-device mesh executes one planned launch per shard and is
+    bit-identical to the replicated ``apply_batched`` — for plain,
+    signed, and reflector sequences."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import dist, obs
+        from repro.core.rotations import random_sequence
+        from repro.core.sequence import RotationSequence
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        b, m, n, k = 8, 64, 32, 6
+        A = jnp.asarray(rng.standard_normal((b, m, n)), jnp.float32)
+        base = random_sequence(jax.random.key(1), n, k)
+        G = jnp.asarray(np.where(rng.standard_normal((n - 1, k)) > 0,
+                                 1.0, -1.0), jnp.float32)
+        variants = {
+            "plain": base,
+            "signed": RotationSequence(base.cos, base.sin, G),
+            "reflector": RotationSequence(base.cos, base.sin, None, True),
+        }
+        for name, seq in variants.items():
+            plan = dist.plan_sharded(seq, like=A, mesh=mesh,
+                                     method="blocked")
+            rep = seq.plan(like=A, method="blocked",
+                           shared_sequence=True).apply_batched(A)
+            out = plan.apply_batched(A)
+            assert jnp.array_equal(out, rep), name
+        # obs attribution: exactly one planned launch per shard, a
+        # modeled comm-bytes counter, and the mesh size as a gauge
+        obs.set_enabled(True)
+        obs.reset()
+        plan = dist.plan_sharded(variants["plain"], like=A, mesh=mesh,
+                                 method="blocked")
+        plan.apply_batched(A)
+        snap = obs.snapshot()
+        obs.set_enabled(False)
+        assert snap["gauges"]["dist.launches_per_shard"] == 1.0, snap
+        assert snap["gauges"]["dist.devices"] == 8.0
+        assert snap["counters"]["dist.comm_bytes"] > 0
+        assert snap["counters"]["dist.applies"] == 1
+        rows = [r for r in snap["roofline"]["dispatches"]
+                if r.get("comm_bytes")]
+        assert rows and rows[0]["launches_per_shard"] == 1, rows
+        print("PARITY OK")
+    """)
+    assert "PARITY OK" in out
+
+
+def test_sharded_plan_grad_and_roundtrip():
+    """custom_vjp parity through ``ShardedSequencePlan.apply`` and the
+    to_dict/from_dict round-trip (mesh re-supplied at load)."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import dist
+        from repro.dist import ShardedSequencePlan
+        from repro.core.rotations import random_sequence
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(2)
+        A = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+        seq = random_sequence(jax.random.key(4), 32, 6)
+        plan = dist.plan_sharded(seq, like=A, mesh=mesh, method="blocked")
+        rp = seq.plan(like=A, method="blocked")
+        g_sh = jax.grad(lambda x: (plan.apply(x) ** 2).sum())(A)
+        g_rep = jax.grad(lambda x: (rp.apply(x) ** 2).sum())(A)
+        assert jnp.allclose(g_sh, g_rep, rtol=1e-5, atol=1e-5)
+        # serialization round-trip: the mesh cannot ride in JSON, so it
+        # is re-supplied; the restored plan applies identically
+        d = plan.to_dict()
+        import json
+        d = json.loads(json.dumps(d))
+        plan2 = ShardedSequencePlan.from_dict(d, seq, mesh)
+        assert plan2.devices == plan.devices
+        assert plan2.execute_sharded == plan.execute_sharded
+        assert jnp.array_equal(plan2.apply(A), plan.apply(A))
+        print("GRAD OK")
+    """)
+    assert "GRAD OK" in out
+
+
+def test_auto_crossover_small_and_large():
+    """``method="auto"`` with ``mesh=`` picks replicated for small n and
+    sharded for large n, consistently with ``modeled_crossover`` (the
+    comm-extended ``cost_components`` arbitration)."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import dist
+        from repro.core.rotations import random_sequence
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(3)
+        for (m, n, k), expect_sharded in [((64, 32, 8), False),
+                                          ((2048, 512, 64), True)]:
+            A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+            seq = random_sequence(jax.random.key(n), n, k)
+            plan = dist.plan_sharded(seq, like=A, mesh=mesh, method="auto")
+            sh_s, rep_s = dist.modeled_crossover(m, n, k, devices=8)
+            assert (sh_s < rep_s) == expect_sharded, (n, sh_s, rep_s)
+            assert plan.execute_sharded == expect_sharded, \\
+                (n, plan.execute_sharded, sh_s, rep_s)
+        print("AUTO OK")
+    """)
+    assert "AUTO OK" in out
+
+
+def test_comm_term_monotone_in_devices():
+    """The §6 communication term: zero when unsharded or D=1, and
+    monotonically increasing bytes/seconds in the mesh size."""
+    from repro.core.registry import Problem, cost_components
+
+    zero = cost_components("blocked", Problem(256, 64, 16))["comm"]
+    assert zero == {"bytes": 0.0, "hops": 0.0, "seconds": 0.0}
+    one = cost_components("blocked",
+                          Problem(256, 64, 16, sharded=True,
+                                  devices=1))["comm"]
+    assert one["bytes"] == 0.0 and one["seconds"] == 0.0
+
+    prev_bytes, prev_secs = 0.0, 0.0
+    for D in (2, 4, 8, 16):
+        comm = cost_components(
+            "blocked", Problem(256, 64, 16, sharded=True,
+                               devices=D))["comm"]
+        assert comm["bytes"] > prev_bytes, (D, comm)
+        assert comm["seconds"] > prev_secs, (D, comm)
+        assert comm["hops"] == math.ceil(math.log2(D))
+        prev_bytes, prev_secs = comm["bytes"], comm["seconds"]
+
+
+def test_sharded_plan_cache_key_isolation():
+    """Sharded plan keys carry ``("sharded", devices)`` in the legacy
+    slot, so plans never transfer between device counts or to
+    single-device keys (distinct ``_split_key`` classes)."""
+    from repro.core.registry import Problem, _plan_key, _split_key
+
+    k1 = _plan_key(Problem(64, 32, 8))
+    k8 = _plan_key(Problem(64, 32, 8, sharded=True, devices=8))
+    k4 = _plan_key(Problem(64, 32, 8, sharded=True, devices=4))
+    assert k1[6] is False
+    assert k8[6] == ("sharded", 8)
+    assert k4[6] == ("sharded", 4)
+
+    (_, cls1, _), (_, cls8, _), (_, cls4, _) = map(
+        _split_key, (k1, k8, k4))
+    assert len({cls1, cls8, cls4}) == 3, (cls1, cls8, cls4)
+    # round-trip through the key: same problem -> identical key/class
+    assert _plan_key(Problem(64, 32, 8, sharded=True, devices=8)) == k8
+    # batch/per-request markers survive alongside the sharded slot
+    kb = _plan_key(Problem(64, 32, 8, sharded=True, devices=8, batch=16,
+                           shared_sequence=False))
+    assert kb[6] == ("sharded", 8) and kb[7] == 16 and kb[8] == "per_req"
+
+
+def test_column_sharded_comm_bytes_live_window():
+    """Per-wave liveness accounting: identity-padded bands are
+    exchange-free, so a padded sequence prices fewer live bands than
+    the dense grid (the dense default stays backward compatible)."""
+    import jax
+    from repro.core.rotations import random_sequence
+    from repro.dist import column_sharded_comm_bytes
+
+    m_loc, n, k, D, n_b, k_b = 64, 32, 16, 4, 8, 4
+    dense = column_sharded_comm_bytes(m_loc, n, k, D, n_b, k_b)
+    assert dense["bands"] == 4 and dense["live_bands"] == 4
+    # a sequence with only the first 2 of 16 waves live: pad_to tail
+    live = random_sequence(jax.random.key(0), n, 2).pad_to(k)
+    win = column_sharded_comm_bytes(m_loc, n, k, D, n_b, k_b,
+                                    sequence=live)
+    assert win["bands"] == 4 and win["live_bands"] == 1, win
+    assert win["pipelined"] < dense["pipelined"]
+    assert win["allgather"] < dense["allgather"]
+    # the static k_live bound gives the same window without the arrays
+    bound = column_sharded_comm_bytes(m_loc, n, k, D, n_b, k_b,
+                                      live_planes=2 * (n - 1))
+    assert bound["live_bands"] == win["live_bands"]
+    # shape mismatch is a clear error, not silent dense pricing
+    with pytest.raises(ValueError):
+        column_sharded_comm_bytes(m_loc, n, k + 1, D, n_b, k_b,
+                                  sequence=live)
 
 
 def test_mini_dryrun_multipod_mesh():
